@@ -1,0 +1,61 @@
+"""Roofline table (deliverable g): read the dry-run records and emit the
+three-term roofline per (arch x shape) on the single-pod mesh."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(pattern="*_1pod.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    rows = []
+    for r in load_records():
+        if not r.get("ok"):
+            rows.append(f"roofline_{r['arch']}_{r['shape']},0,ERROR")
+            continue
+        rf = r["roofline"]
+        step_us = rf["step_time_lower_bound_s"] * 1e6
+        rows.append(
+            f"roofline_{r['arch']}_{r['shape']},{step_us:.0f},"
+            f"dominant={rf['dominant']};"
+            f"compute_ms={rf['compute_s'] * 1e3:.2f};"
+            f"memory_ms={rf['memory_s'] * 1e3:.2f};"
+            f"collective_ms={rf['collective_s'] * 1e3:.2f};"
+            f"useful_flops={rf['useful_flops_ratio']:.2f};"
+            f"peak_gib={r['memory']['peak_estimate_bytes'] / 2**30:.1f}"
+        )
+    return rows
+
+
+def markdown_table(pattern="*_1pod.json"):
+    """Render the §Roofline table for EXPERIMENTS.md."""
+    lines = [
+        "| arch | shape | strategy | compute s | memory s | collective s |"
+        " dominant | useful FLOPs | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(pattern):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        rf, mem = r["roofline"], r["memory"]
+        peak = mem["peak_estimate_bytes"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['collective_s']:.4f} | {rf['dominant']} "
+            f"| {rf['useful_flops_ratio'] * 100:.0f}% "
+            f"| {peak / 2**30:.1f} | {'Y' if peak <= mem['hbm_budget'] else 'N'} |"
+        )
+    return "\n".join(lines)

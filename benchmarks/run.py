@@ -1,0 +1,31 @@
+"""Benchmark harness — one module per paper claim (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract:
+  * operator selection crossover  (paper §3 Sparse Operations)
+  * plan selection per arch/shape (paper §1/§3 compiler claim)
+  * parfor scaling, collective-free (paper §3 Distributed Operations)
+  * kernel micro-benchmarks       (paper §3 BLAS/GPU backend)
+  * roofline terms from the dry-run artifacts (deliverable g)
+"""
+
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_operator_selection,
+                            bench_parfor, bench_plan_selection,
+                            bench_roofline)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_operator_selection, bench_plan_selection,
+                bench_parfor, bench_kernels, bench_roofline):
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod.__name__},0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+
+
+if __name__ == '__main__':
+    main()

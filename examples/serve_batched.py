@@ -1,0 +1,69 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuation tokens with the plan-chosen KV-cache layout. Uses the
+attention-free mamba2 family by default (constant-memory state).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch yi-6b-smoke
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import InputShape, MeshConfig
+from repro.configs import get_config
+from repro.core.planner import compile_plan
+from repro.models.model import build_model
+from repro.runtime.serve_loop import greedy_decode, make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    mesh_cfg = MeshConfig(shape=(len(jax.devices()),), axis_names=("data",))
+    context = args.prompt_len + args.gen
+    shape = InputShape("serve", context, args.batch, "decode")
+    plan = compile_plan(cfg, shape, mesh_cfg)
+    print(plan.explain())
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    # prefill by stepping the decode path over the prompt (correct for all
+    # families incl. recurrent state; a fused prefill kernel is the TPU
+    # fast path, exercised by the prefill_32k dry-run shape)
+    cache = model.init_cache(args.batch, context)
+    step = jax.jit(make_decode_step(model, plan.config, mesh_cfg))
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+    prefill_s = time.perf_counter() - t0
+
+    first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    toks, cache = greedy_decode(model, params, cache, first,
+                                args.prompt_len, args.gen, decode_step=step)
+    jax.block_until_ready(toks)
+    decode_s = time.perf_counter() - t0
+
+    print(f"prefill: {args.prompt_len * args.batch / prefill_s:.1f} tok/s   "
+          f"decode: {args.gen * args.batch / decode_s:.1f} tok/s")
+    print("generated:", toks[0].tolist()[:16], "...")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

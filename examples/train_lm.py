@@ -1,0 +1,83 @@
+"""End-to-end training driver: a transformer LM trained for a few hundred
+steps through the full production path (plan compiler -> sharded train
+step -> metrics -> checkpoint).
+
+Default is a ~5M-param model that converges visibly in minutes on this
+2-core CPU container; ``--size 100m`` builds a ~100M-param model (same
+path; budget multiple hours on CPU, minutes on a real TPU slice).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.config import InputShape, MeshConfig, ModelConfig, TrainConfig
+from repro.core.planner import compile_plan
+from repro.data import make_batch
+from repro.models.model import build_model
+from repro.runtime.metrics import StepTimer, format_metrics
+from repro.runtime.train_loop import init_opt_state, make_train_step
+
+SIZES = {
+    "5m": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+               head_dim=64, d_ff=768, vocab_size=512),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=2304, vocab_size=32000),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(SIZES), default="5m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--checkpoint", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"lm-{args.size}", family="dense",
+                      tie_embeddings=False, **SIZES[args.size])
+    model = build_model(cfg, dtype=jnp.float32)
+    print(f"params: {model.param_count() / 1e6:.1f}M")
+
+    mesh_cfg = MeshConfig(shape=(len(jax.devices()),), axis_names=("data",))
+    shape = InputShape("lm", args.seq, args.batch, "train")
+    train = TrainConfig(optimizer="adam", learning_rate=args.lr)
+    plan = compile_plan(cfg, shape, mesh_cfg, train)
+    print(plan.explain())
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = init_opt_state("adam", params, plan.config)
+    step_fn = jax.jit(make_train_step(model, plan.config, mesh_cfg, train))
+
+    timer = StepTimer(model=cfg, shape=shape, mesh=mesh_cfg)
+    losses = []
+    for i in range(args.steps):
+        batch = make_batch(cfg, shape, step=i, dtype=jnp.float32)
+        timer.start()
+        params, opt, metrics = step_fn(params, opt, batch, jnp.int32(i))
+        rec = timer.stop(i, metrics)
+        losses.append(rec["loss"])
+        if i % 20 == 0 or i == args.steps - 1:
+            print(format_metrics(rec), flush=True)
+
+    save_checkpoint(args.checkpoint, params, step=args.steps)
+    restored, step = load_checkpoint(args.checkpoint, params)
+    assert step == args.steps
+    print(f"checkpoint roundtrip OK at step {step}")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0] * 0.9, "loss should drop noticeably"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

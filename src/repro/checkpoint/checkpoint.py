@@ -1,0 +1,88 @@
+"""Sharding-aware checkpointing (npz-based; no external deps).
+
+Saves a flat {path: array} mapping plus a manifest. On restore, arrays are
+``jax.device_put`` with the *target plan's* shardings — so a checkpoint
+written under one execution plan restores under another (the resharding
+rides on device_put), which is exactly how a SystemML-style compiler lets
+the same program move between cluster shapes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0,
+                    extra: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
+    """``like``: pytree with the same structure (arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of
+    NamedShardings applied at restore."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    like_flat = _flatten(like)
+    if set(like_flat) != set(flat):
+        missing = set(like_flat) - set(flat)
+        extra = set(flat) - set(like_flat)
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+
+    shard_flat = _flatten(shardings) if shardings is not None else {}
+    restored = {}
+    for k, template in like_flat.items():
+        arr = flat[k]
+        if tuple(arr.shape) != tuple(template.shape):
+            raise ValueError(f"{k}: shape {arr.shape} != {template.shape}")
+        arr = arr.astype(template.dtype)
+        if k in shard_flat and shard_flat[k] is not None:
+            restored[k] = jax.device_put(arr, shard_flat[k])
+        else:
+            restored[k] = jnp.asarray(arr)
+
+    # rebuild the original structure
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            seq = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(seq)
+        return restored[prefix[:-1]]
+
+    return rebuild(like), manifest["step"]

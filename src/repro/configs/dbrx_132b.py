@@ -1,0 +1,23 @@
+"""dbrx-132b [moe] — 40L, d_model=6144, 48H (GQA kv=8), expert d_ff=10752,
+vocab=100352, 16 experts top-4 (fine-grained). [hf:databricks/dbrx-base]
+"""
+
+from repro.config import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b",
+        family="moe",
+        num_layers=40,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        vocab_size=100352,
+        num_experts=16,
+        experts_per_token=4,
+        rope_theta=500_000.0,
+        citation="hf:databricks/dbrx-base",
+    )

@@ -1,0 +1,181 @@
+"""Three-term roofline cost model.
+
+SystemML's optimizer is *cost-based*: it compares candidate plans with an
+analytic cost model before emitting one. Ours scores each candidate plan
+with the three roofline terms used throughout EXPERIMENTS.md:
+
+    compute term    = FLOPs            / (chips x peak_FLOP/s)
+    memory term     = HBM bytes        / (chips x HBM_bw)
+    collective term = collective bytes / (chips x link_bw)
+
+Two entry points:
+
+* :func:`analytic_cost` — napkin-math terms from the model config alone
+  (planner-side, used to *choose* plans).
+* :func:`roofline_terms` — the same three terms from *measured* numbers
+  (``compiled.cost_analysis()`` + HLO-parsed collective bytes), used by
+  ``launch.roofline`` to *report* plans.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig
+from repro.core.memory import ACT_BYTES, PARAM_BYTES, _cache_dense_bytes
+from repro.core.strategies import PlanConfig
+
+
+@dataclass
+class CostEstimate:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic overlap model: max of terms (lower bound on step time)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def summary(self) -> str:
+        return (
+            f"cost/chip: compute={self.compute_s * 1e3:.3f}ms "
+            f"memory={self.memory_s * 1e3:.3f}ms "
+            f"collective={self.collective_s * 1e3:.3f}ms "
+            f"dominant={self.dominant} "
+            f"useful_flops={100 * self.useful_flops_ratio:.1f}%"
+        )
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    hw: HardwareSpec,
+    model_flops: float = 0.0,
+    per_chip: bool = False,
+) -> CostEstimate:
+    """Terms in seconds. ``flops``/``hbm_bytes`` are global unless
+    ``per_chip`` (XLA's cost_analysis on an SPMD module is per-chip)."""
+    div = 1 if per_chip else chips
+    return CostEstimate(
+        compute_s=flops / (div * hw.peak_flops),
+        memory_s=hbm_bytes / (div * hw.hbm_bandwidth),
+        collective_s=collective_bytes / (div * hw.ici_bandwidth),
+        flops=flops / div * chips if per_chip else flops,
+        hbm_bytes=hbm_bytes / div * chips if per_chip else hbm_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytic (planner-side) estimators
+# ---------------------------------------------------------------------------
+
+
+def model_flops_per_step(model: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); forward-only kinds
+    use 2 N D. Decode processes one token per sequence."""
+    n = model.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: 1 new token / sequence
+
+
+def _attention_flops(model: ModelConfig, shape: InputShape) -> float:
+    """Quadratic attention FLOPs not captured by 6ND."""
+    pat = model.layer_pattern()
+    n_attn = pat.count("a")
+    hd = model.num_heads * model.head_dim
+    s = shape.seq_len
+    if shape.kind == "decode":
+        # one query against S cached keys
+        win = model.window_size or (model.serve_window if s > 262_144 else s)
+        per_layer = 4.0 * shape.global_batch * min(s, win) * hd
+        mult = 1.0
+    else:
+        win = model.window_size or s
+        per_layer = 4.0 * shape.global_batch * s * min(s, win) * hd / 2  # causal
+        mult = 3.0 if shape.kind == "train" else 1.0
+    flops = n_attn * per_layer * mult
+    if model.is_encdec and shape.kind != "decode":
+        flops += model.encoder_layers * 4.0 * shape.global_batch * model.encoder_seq**2 * hd
+    return flops
+
+
+def analytic_cost(
+    model: ModelConfig,
+    shape: InputShape,
+    mesh: MeshConfig,
+    plan: PlanConfig,
+    hw: HardwareSpec,
+) -> CostEstimate:
+    chips = mesh.num_devices
+    mf = model_flops_per_step(model, shape)
+    flops = mf + _attention_flops(model, shape)
+    if shape.kind == "train" and plan.remat:
+        flops *= 4.0 / 3.0  # one extra forward
+
+    p_bytes = model.param_count() * PARAM_BYTES
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    act_traffic = tokens * model.d_model * ACT_BYTES * model.num_layers * 6
+    hbm = p_bytes * (3 if shape.kind == "train" else 1) + act_traffic
+    if shape.kind == "decode":
+        hbm += _cache_dense_bytes(model, shape.seq_len, shape.global_batch)
+
+    coll = _collective_bytes(model, shape, mesh, plan)
+    return roofline_terms(flops, hbm, coll, chips, hw, model_flops=mf)
+
+
+def _collective_bytes(
+    model: ModelConfig, shape: InputShape, mesh: MeshConfig, plan: PlanConfig
+) -> float:
+    """Per-chip collective traffic estimate for the candidate plan."""
+    p_bytes = model.param_count() * PARAM_BYTES
+    mp = mesh.model_parallelism
+    dp = mesh.data_parallelism
+    total = 0.0
+    if shape.kind == "train" and plan.batch_axes:
+        if plan.params_over_data:
+            # FSDP: all-gather fwd + all-gather bwd + reduce-scatter grads
+            total += 3 * p_bytes / (mp if plan.tensor_parallel else 1)
+        else:
+            # DP: ring all-reduce of full grads ~ 2x payload
+            total += 2 * p_bytes / (mp if plan.tensor_parallel else 1)
+    if plan.tensor_parallel:
+        tokens_dev = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1) / max(1, dp)
+        per_layer = 2 * tokens_dev * model.d_model * ACT_BYTES  # 2 allreduce/layer
+        mult = 2 if shape.kind == "train" else 1
+        total += model.num_layers * per_layer * mult
+    if plan.expert_parallel and model.num_experts:
+        tokens_dev = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1) / max(1, dp)
+        # all-to-all dispatch + combine, fwd (+bwd for train)
+        mult = 4 if shape.kind == "train" else 2
+        total += model.num_layers * tokens_dev * model.d_model * ACT_BYTES * mult * (
+            model.experts_per_token / max(1, model.experts_per_token)
+        )
+    return total

@@ -1,0 +1,243 @@
+"""Worst-case memory estimation (paper §3, "Distributed Operations").
+
+SystemML compiles a single-node plan "if the input, output and intermediate
+matrices fit in the driver JVM" and escalates to a distributed plan
+otherwise. The estimator here plays the same role for the TPU mesh: given a
+(model x shape x mesh) and a candidate :class:`PlanConfig`, compute the
+worst-case **per-chip HBM bytes** for every tensor class. The planner
+escalates through the plan lattice until the estimate fits the HBM budget.
+
+Estimates are deliberately *worst-case* (SystemML's estimator is too): they
+must never under-estimate, or a "fitting" plan OOMs at runtime.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig, TrainConfig
+from repro.core.strategies import PlanConfig
+
+ACT_BYTES = 2       # bf16 activations
+PARAM_BYTES = 2     # bf16 params
+GRAD_BYTES = 2
+
+# optimizer -> number of per-param state slots (repro.nn.optim)
+OPTIMIZER_SLOTS = {
+    "sgd": 0,
+    "sgd_momentum": 1,
+    "sgd_nesterov": 1,
+    "adagrad": 1,
+    "rmsprop": 1,
+    "adam": 2,
+}
+
+
+@dataclass
+class MemoryEstimate:
+    per_device: Dict[str, float] = field(default_factory=dict)
+    budget: int = 0
+
+    @property
+    def total(self) -> float:
+        return sum(self.per_device.values())
+
+    def fits(self, headroom: float = 0.9) -> bool:
+        return self.total <= self.budget * headroom
+
+    def summary(self) -> str:
+        gib = 1024**3
+        parts = "  ".join(f"{k}={v / gib:.2f}GiB" for k, v in self.per_device.items())
+        return (
+            f"memory/chip: total={self.total / gib:.2f}GiB "
+            f"budget={self.budget / gib:.1f}GiB fits={self.fits()}  [{parts}]"
+        )
+
+
+def _opt_bytes_per_param(optimizer: str, opt_dtype: str) -> float:
+    slots = OPTIMIZER_SLOTS.get(optimizer, 2)
+    slot_bytes = 4 if opt_dtype == "float32" else 2
+    # fp32 master copy kept only with fp32 optimizer state (mixed precision)
+    master = 4 if opt_dtype == "float32" else 0
+    return slots * slot_bytes + master
+
+
+def _param_divisors(plan: PlanConfig, mesh: MeshConfig) -> float:
+    div = 1.0
+    if plan.tensor_parallel or plan.expert_parallel:
+        div *= mesh.model_parallelism
+    if plan.params_over_data:
+        div *= mesh.data_parallelism
+    return div
+
+
+def estimate_memory(
+    model: ModelConfig,
+    shape: InputShape,
+    mesh: MeshConfig,
+    plan: PlanConfig,
+    train: TrainConfig,
+    hw: HardwareSpec,
+) -> MemoryEstimate:
+    est = MemoryEstimate(budget=hw.hbm_bytes)
+    p = model.param_count()
+    # ~1.5% of params (norm scales, biases, router, A/dt vectors) do not shard
+    # over the model axis; they still shard over data under FSDP.
+    non_shardable = max(0.015 * p, 2 * model.d_model * model.num_layers)
+    shardable = p - non_shardable
+
+    mp = mesh.model_parallelism if (plan.tensor_parallel or plan.expert_parallel) else 1
+    dp_div = mesh.data_parallelism if plan.params_over_data else 1
+
+    params_dev = (shardable / (mp * dp_div) + non_shardable / dp_div) * PARAM_BYTES
+    est.per_device["params"] = params_dev
+
+    dp = mesh.data_parallelism if plan.batch_axes else 1
+
+    if shape.kind == "train":
+        est.per_device["grads"] = params_dev / PARAM_BYTES * GRAD_BYTES
+        est.per_device["opt_state"] = (
+            params_dev / PARAM_BYTES * _opt_bytes_per_param(train.optimizer, plan.opt_state_dtype)
+        )
+        est.per_device["activations"] = _train_activation_bytes(model, shape, plan, dp, mp)
+    elif shape.kind == "prefill":
+        est.per_device["activations"] = _prefill_activation_bytes(model, shape, plan, dp, mp)
+    else:  # decode
+        est.per_device["kv_cache"] = _cache_bytes(model, shape, plan, mesh)
+        est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp)
+
+    est.per_device["workspace"] = 0.08 * sum(est.per_device.values())
+    return est
+
+
+# ---------------------------------------------------------------------------
+# per-kind activation estimates
+# ---------------------------------------------------------------------------
+
+
+def _layer_working_cols(model: ModelConfig, mp: int, variant: str) -> float:
+    """Per-token working-set width (columns) of one layer's live tensors,
+    assuming flash attention (no S^2 score materialization)."""
+    d = model.d_model
+    cols = 4.0 * d  # residual stream, norm output, block in/out
+    pat = model.layer_pattern()
+    # use the widest layer kind present (worst case)
+    widths = []
+    for kind in set(pat):
+        if kind == "a":
+            qkv = model.num_heads * model.head_dim + 2 * model.num_kv_heads * model.head_dim
+            ffn = 3 * model.d_ff
+            moe_expand = 0.0
+            if model.num_experts:
+                # top-k routed expert activations per token (model-sharded)
+                ffn = 3 * model.d_ff * model.experts_per_token + model.num_experts
+                # dispatch expansion: k copies of each token's d_model row in
+                # the (tokens*k, d) gather buffers — NOT model-sharded, and
+                # several live at once through fwd+bwd (x4)
+                moe_expand = 4.0 * model.experts_per_token * d
+            widths.append((qkv + ffn) / mp + 2 * model.num_heads * model.head_dim / mp
+                          + moe_expand)
+        elif kind == "s":
+            widths.append((2 * model.d_inner + 2 * model.ssm_state + model.ssm_num_heads) / mp + model.d_inner / mp)
+        elif kind == "r":
+            w = model.lru_width or d
+            widths.append(4.0 * w / mp)
+    return cols + (max(widths) if widths else 0.0)
+
+
+def _train_activation_bytes(
+    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int
+) -> float:
+    b_dev = max(1, shape.global_batch // dp)
+    b_micro = max(1, b_dev // plan.microbatches)
+    s = shape.seq_len
+    tok = b_micro * s
+    if plan.remat:
+        # scan carries one residual-stream checkpoint per layer + one layer's
+        # recomputation working set + logits chunk
+        ckpt_div = mp if plan.seq_shard_checkpoints else 1
+        saved = model.num_layers * tok * model.d_model * ACT_BYTES / ckpt_div
+        working = tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
+    else:
+        saved = model.num_layers * tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
+        working = 0.0
+    # loss computed over vocab shard (vocab is model-sharded under TP)
+    logits = tok * (model.vocab_size / mp) * ACT_BYTES
+    if model.is_encdec:
+        enc_tok = b_micro * model.encoder_seq
+        saved += model.encoder_layers * enc_tok * model.d_model * ACT_BYTES
+    return saved + working + logits
+
+
+def _prefill_activation_bytes(
+    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int
+) -> float:
+    b_dev = max(1, shape.global_batch // dp)
+    # context parallelism: seq dim itself sharded (KV all-gathered per layer)
+    sp = mp if plan.seq_axes else 1
+    tok = b_dev * shape.seq_len // sp
+    # forward-only: a few live layer boundaries + one working set + the
+    # KV cache being produced
+    live = 3 * tok * model.d_model * ACT_BYTES
+    working = tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
+    kv = _cache_dense_bytes(model, shape.seq_len, b_dev) / (mp if (plan.tensor_parallel or plan.seq_axes) else 1)
+    if plan.seq_axes:
+        # one layer's all-gathered K/V working copy
+        working += b_dev * shape.seq_len * 2 * model.num_kv_heads * model.head_dim * ACT_BYTES
+    logits = b_dev * max(1, model.vocab_size // mp) * ACT_BYTES  # last-token logits
+    return live + working + kv + logits
+
+
+def _decode_activation_bytes(model: ModelConfig, shape: InputShape, dp: int, mp: int) -> float:
+    b_dev = max(1, shape.global_batch // dp)
+    per_tok = _layer_working_cols(model, mp, "full") + model.vocab_size / mp
+    return b_dev * per_tok * ACT_BYTES * 4  # x4: double-buffering + fudge
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent-state cache
+# ---------------------------------------------------------------------------
+
+
+def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int) -> float:
+    """Un-sharded cache bytes for one full attention stack."""
+    pat = model.layer_pattern()
+    total = 0.0
+    kv_width = 2 * model.num_kv_heads * model.head_dim
+    for kind in pat:
+        if kind == "a":
+            eff_seq = seq
+            if model.window_size:
+                eff_seq = min(seq, model.window_size)
+            elif model.serve_window and seq > 262_144:
+                # sliding-window serving variant for long_500k (DESIGN §5)
+                eff_seq = min(seq, model.serve_window)
+            total += batch * eff_seq * kv_width * ACT_BYTES
+        elif kind == "s":
+            st = model.ssm_num_heads * model.ssm_head_dim * model.ssm_state
+            conv = model.ssm_conv_width * (model.d_inner + 2 * model.ssm_state)
+            total += batch * (st + conv) * ACT_BYTES
+        elif kind == "r":
+            w = model.lru_width or model.d_model
+            total += batch * w * 4  # RG-LRU state kept fp32
+    if model.is_encdec:
+        # cross-attention K/V over encoder outputs
+        total += model.num_layers * batch * model.encoder_seq * kv_width * ACT_BYTES
+    return total
+
+
+def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: MeshConfig) -> float:
+    batch_div = 1
+    for ax, sz in zip(mesh.axis_names, mesh.shape):
+        if ax in plan.cache_batch_axes:
+            batch_div *= sz
+    batch_div = min(batch_div, shape.global_batch)
+    div = 1
+    if plan.cache_heads_over_model:
+        div *= mesh.model_parallelism
+    for ax, sz in zip(mesh.axis_names, mesh.shape):
+        if ax in plan.cache_seq_axes:
+            div *= sz
+    b = max(1, shape.global_batch // batch_div)
+    return _cache_dense_bytes(model, shape.seq_len, b) / div

@@ -1,0 +1,108 @@
+"""Execution-plan IR.
+
+SystemML's compiler output is a *hybrid runtime execution plan*: a choice of
+single-node vs distributed operators per op, driven by memory estimates.
+Our plan IR is the TPU analogue: a :class:`PlanConfig` describing how every
+tensor class (batch, params, optimizer state, KV cache, experts) is laid out
+on the mesh, plus bookkeeping for the chosen operator variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional, Tuple
+
+from repro.config import InputShape, MeshConfig, ModelConfig
+
+
+class Strategy(str, Enum):
+    """Named points in the plan lattice (DESIGN.md §4), cheapest first.
+
+    DATA_PARALLEL is the paper-faithful distributed plan (SystemML's
+    data-parallel RDD plan: weights replicated, rows partitioned).
+    Everything below it is the beyond-paper extension of the same
+    memory-driven escalation idea.
+    """
+
+    LOCAL = "local"
+    DATA_PARALLEL = "data_parallel"
+    DP_TP = "dp_tensor_parallel"
+    FSDP = "fsdp"
+    FSDP_TP = "fsdp_tensor_parallel"
+
+    @property
+    def order(self) -> int:
+        return list(Strategy).index(self)
+
+
+@dataclass(frozen=True)
+class PlanConfig:
+    """Concrete layout decisions for one (model x shape x mesh) run."""
+
+    strategy: Strategy
+    # -- tensor layouts ----------------------------------------------------
+    batch_axes: Tuple[str, ...] = ()          # batch dim sharded over these
+    seq_axes: Tuple[str, ...] = ()            # context parallelism (prefill)
+    tensor_parallel: bool = False             # heads/ffn/vocab over "model"
+    params_over_data: bool = False            # FSDP: params+grads+opt over data
+    expert_parallel: bool = False             # MoE expert dim over "model"
+    # -- serving cache layout ---------------------------------------------
+    cache_batch_axes: Tuple[str, ...] = ()
+    cache_heads_over_model: bool = False
+    cache_seq_axes: Tuple[str, ...] = ()      # long-context: shard cached seq
+    # -- numeric / scheduling knobs (plan-chosen, SystemML-style) ----------
+    opt_state_dtype: str = "float32"
+    seq_shard_checkpoints: bool = False       # Megatron-style sequence
+    # parallelism for remat'd residual checkpoints (over "model")
+    remat: bool = True
+    microbatches: int = 1                     # gradient-accumulation chunks
+    attention_variant: str = "full"           # full | window | none
+    # -- operator variants chosen by format dispatch -----------------------
+    notes: Tuple[str, ...] = ()
+
+    def replace(self, **kw) -> "PlanConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class ExecutionPlan:
+    """Compiler output: layout config + estimates + EXPLAIN text."""
+
+    model: ModelConfig
+    shape: InputShape
+    mesh: MeshConfig
+    config: PlanConfig
+    memory: "object" = None     # core.memory.MemoryEstimate
+    cost: "object" = None       # core.cost.CostEstimate
+
+    def explain(self) -> str:
+        """SystemML-style EXPLAIN output for the generated plan."""
+        c = self.config
+        lines = [
+            f"# EXECUTION PLAN  {self.model.name} x {self.shape.name} "
+            f"x mesh{self.mesh.shape}",
+            f"strategy:            {c.strategy.value}",
+            f"batch sharded over:  {c.batch_axes or '(replicated)'}",
+            f"seq sharded over:    {c.seq_axes or '(unsharded)'}",
+            f"tensor parallel:     {c.tensor_parallel}",
+            f"params over data:    {c.params_over_data} (FSDP/ZeRO)",
+            f"expert parallel:     {c.expert_parallel}",
+            f"opt-state dtype:     {c.opt_state_dtype}",
+            f"remat:               {c.remat}   microbatches: {c.microbatches}",
+            f"attention variant:   {c.attention_variant}",
+        ]
+        if self.shape.is_decode:
+            lines += [
+                f"kv-cache batch axes: {c.cache_batch_axes or '(replicated)'}",
+                f"kv-cache heads/model:{c.cache_heads_over_model}  "
+                f"seq axes:{c.cache_seq_axes or '()'}",
+            ]
+        if self.memory is not None:
+            lines.append(self.memory.summary())
+        if self.cost is not None:
+            lines.append(self.cost.summary())
+        for n in c.notes:
+            lines.append(f"note: {n}")
+        return "\n".join(lines)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (SyntheticClassification, SyntheticLM,
+                                 TokenDatasetSpec, make_batch)
+
+__all__ = ["SyntheticLM", "SyntheticClassification", "TokenDatasetSpec",
+           "make_batch"]

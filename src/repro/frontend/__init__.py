@@ -1,0 +1,3 @@
+from repro.frontend.keras2plan import Keras2Plan, generate_dml
+
+__all__ = ["Keras2Plan", "generate_dml"]

@@ -1,0 +1,79 @@
+"""conv2d via im2col lowering — the paper's convolution strategy (ref [5]),
+tiled for the MXU.
+
+SystemML lowers convolution to an im2col patch matrix followed by a GEMM
+(and its GPU backend calls CuDNN which does the same). The TPU adaptation:
+each grid step stages one image's input block in VMEM, materializes the
+(Ho*Wo x C*k*k) patch matrix *in VMEM only*, and multiplies against a
+filter tile — the im2col intermediate never touches HBM, which is exactly
+the "reuse temporary im2col intermediates" optimization the paper lists as
+future work for its codegen.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, c, h, w, kernel, stride, ho, wo):
+    x = x_ref[0]                           # (C, Hp, Wp) pre-padded
+    # build the (Ho*Wo, C*k*k) patch matrix in VMEM via static slicing
+    cols = []
+    for ci in range(c):
+        for ki in range(kernel):
+            for kj in range(kernel):
+                patch = jax.lax.slice(
+                    x, (ci, ki, kj),
+                    (ci + 1, ki + stride * ho, kj + stride * wo),
+                    (1, stride, stride),
+                )  # (1, ho, wo)
+                cols.append(patch.reshape(ho * wo))
+    patches = jnp.stack(cols, axis=1)      # (Ho*Wo, C*k*k)
+    wmat = w_ref[...]                      # (C*k*k, bf)
+    out = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    o_ref[0] = out.astype(o_ref.dtype)     # (Ho*Wo, bf)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "bf", "interpret"))
+def conv2d_im2col(
+    x: jnp.ndarray,    # (N, C, H, W)
+    w: jnp.ndarray,    # (F, C, k, k)
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    bf: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, c, h, wd = x.shape
+    f, _, kernel, _ = w.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, wd + 2 * pad
+    ho = (hp - kernel) // stride + 1
+    wo = (wp - kernel) // stride + 1
+    bf = min(bf, f)
+    fp = ((f + bf - 1) // bf) * bf
+    wmat = w.reshape(f, c * kernel * kernel).T      # (C*k*k, F)
+    if fp != f:
+        wmat = jnp.pad(wmat, ((0, 0), (0, fp - f)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_kernel, c=c, h=hp, w=wp, kernel=kernel, stride=stride,
+            ho=ho, wo=wo,
+        ),
+        grid=(n, fp // bf),
+        in_specs=[
+            pl.BlockSpec((1, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((c * kernel * kernel, bf), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ho * wo, bf), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho * wo, fp), x.dtype),
+        interpret=interpret,
+    )(x, wmat)
+    # (N, Ho*Wo, F) -> (N, F, Ho, Wo)
+    return out[:, :, :f].transpose(0, 2, 1).reshape(n, f, ho, wo)

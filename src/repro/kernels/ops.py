@@ -1,0 +1,102 @@
+"""Operator dispatch layer (paper §3, "GPU Backend" / "Native BLAS").
+
+SystemML "compile[s] a GPU low-level operator if the input data, intermediate
+data and output data for a given operation fits in the GPU device memory",
+falling back to generic operators otherwise. The TPU analogue, one level
+down the hierarchy: dispatch to the Pallas kernel when the *per-block
+working set fits VMEM*, else fall back to plain XLA (jnp) ops.
+
+On this CPU container the Pallas path runs in ``interpret=True`` mode (used
+by tests/benchmarks); on a real TPU ``interpret=False`` compiles to Mosaic.
+Set ``ops.BACKEND`` to force a path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TPU_V5E
+from repro.kernels import ref
+from repro.kernels.conv2d_im2col import conv2d_im2col
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul as matmul_kernel
+from repro.kernels.ssd_scan import ssd_scan
+
+# "auto": pallas iff running on TPU; "pallas": force (interpret on CPU);
+# "xla": force jnp fallback.
+BACKEND = "auto"
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas() -> bool:
+    if BACKEND == "pallas":
+        return True
+    if BACKEND == "xla":
+        return False
+    return _on_tpu()
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _fits_vmem(*block_bytes: float) -> bool:
+    """SystemML's device-memory-fit test, applied to VMEM per-block sets."""
+    return sum(block_bytes) <= TPU_V5E.vmem_bytes * 0.8
+
+
+# ---------------------------------------------------------------------------
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jnp.ndarray:
+    dt = a.dtype.itemsize
+    if _use_pallas() and _fits_vmem(bm * bk * dt, bk * bn * dt, bm * bn * 4):
+        return matmul_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=_interpret())
+    return ref.matmul_ref(a, b)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    n, c, h, wd = x.shape
+    f, _, k, _ = w.shape
+    dt = x.dtype.itemsize
+    hp, wp = h + 2 * pad, wd + 2 * pad
+    ho, wo = (hp - k) // stride + 1, (wp - k) // stride + 1
+    blk = c * hp * wp * dt + ho * wo * c * k * k * 4 + c * k * k * 128 * dt
+    if _use_pallas() and _fits_vmem(blk):
+        return conv2d_im2col(x, w, stride=stride, pad=pad, interpret=_interpret())
+    return ref.conv2d_ref(x, w, stride=stride, pad=pad)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: Optional[int] = None, bq: int = 128, bk: int = 128):
+    d = q.shape[-1]
+    dt = q.dtype.itemsize
+    if _use_pallas() and _fits_vmem(bq * d * dt, 2 * bk * d * dt, bq * bk * 4,
+                                    bq * d * 4):
+        return flash_attention(
+            q, k, v, causal=causal, window=window,
+            q_offset=-1 if q_offset is None else q_offset,
+            bq=bq, bk=bk, interpret=_interpret(),
+        )
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+
+
+def ssd(x, dt, a, b_mat, c_mat, d, *, chunk: int = 64):
+    P = x.shape[-1]
+    N = b_mat.shape[-1]
+    dtb = x.dtype.itemsize
+    blk = chunk * (P + 2 * N + 1) * dtb + chunk * chunk * 4 + P * N * 4
+    if _use_pallas() and _fits_vmem(blk):
+        return ssd_scan(x, dt, a, b_mat, c_mat, d, chunk=chunk,
+                        interpret=_interpret())
+    y, _ = ref.ssd_chunked_ref(x, dt, a, b_mat, c_mat, d,
+                               chunk=min(chunk, x.shape[1]))
+    return y

@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth; kernels are asserted allclose
+against these across shape/dtype sweeps in ``tests/test_kernels_*.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# conv2d via im2col (paper ref [5]) — NCHW, square kernel
+# ---------------------------------------------------------------------------
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """x: (N, C, H, W); w: (F, C, k, k) -> (N, F, Ho, Wo)."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal, optional sliding window)
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jnp.ndarray,      # (B, Hq, Sq, D)
+    k: jnp.ndarray,      # (B, Hkv, Sk, D)
+    v: jnp.ndarray,      # (B, Hkv, Sk, D)
+    causal: bool = True,
+    window: int = 0,     # 0 = full; else sliding window size
+    q_offset: Optional[int] = None,  # absolute position of q[0] (decode)
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) / (d ** 0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, g, sq, d)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    sk = k.shape[2]
+    off = q_offset if q_offset is not None else sk - sq
+    qpos = off + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not NaN
+    row_has_any = jnp.any(mask, axis=-1)[None, None, None, :, None]  # (1,1,1,sq,1)
+    p = jnp.where(row_has_any, p, 0.0)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) — sequential-scan semantics
+# ---------------------------------------------------------------------------
+
+def ssd_ref(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)        softplus-activated step sizes
+    a: jnp.ndarray,      # (H,)             negative decay rates (A = -exp(a_log))
+    b_mat: jnp.ndarray,  # (B, S, N)
+    c_mat: jnp.ndarray,  # (B, S, N)
+    d: jnp.ndarray,      # (H,)             skip connection
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+):
+    """Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+
+    Recurrence per head h:
+        state_t = exp(dt_t a_h) state_{t-1} + dt_t x_t b_t^T
+        y_t     = state_t c_t + d_h x_t
+    """
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    state0 = (jnp.zeros((B, H, P, N), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * af[None, :])                  # (B,H)
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]  # (B,H,P,N)
+        state = decay[..., None, None] * state + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    inputs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+              bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    final, ys = lax.scan(step, state0, inputs)
+    y = ys.transpose(1, 0, 2, 3) + d[None, None, :, None] * xf
+    return y.astype(x.dtype), final
+
+
+def ssd_chunked_ref(x, dt, a, b_mat, c_mat, d, chunk: int = 16, init_state=None):
+    """Chunked (BLAS-3 / "duality") formulation — same math as :func:`ssd_ref`
+    but expressed as within-chunk matmuls + inter-chunk state carry. This is
+    the algorithm the Pallas kernel implements; kept in ref form so the
+    kernel and the math can be tested independently."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    bf = b_mat.astype(jnp.float32).reshape(B, nc, chunk, N)
+    cf = c_mat.astype(jnp.float32).reshape(B, nc, chunk, N)
+    af = a.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, bc, cc = inp    # (B,c,H,P), (B,c,H), (B,c,N), (B,c,N)
+        aseg = dtc * af[None, None, :]                 # (B,c,H)
+        cum = jnp.cumsum(aseg, axis=1)                 # inclusive cumsum
+        total = cum[:, -1]                             # (B,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i>=j. Mask BEFORE the
+        # exp: the i<j entries are positive and overflow to inf, which
+        # poisons the gradient of jnp.where (NaN via inf * 0).
+        li = cum[:, :, None, :] - cum[:, None, :, :]   # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.exp(jnp.where(tri[None, :, :, None], li, -1e30))
+        scores = jnp.einsum("bin,bjn->bij", cc, bc)    # (B,c,c)
+        w = scores[..., None] * lmat                   # (B,c,c,H)
+        dx = dtc[..., None] * xc                       # (B,c,H,P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, dx)
+        # inter-chunk: y += exp(cum_i) * C_i . state_prev
+        y_inter = jnp.einsum("bhpn,bin->bihp", state, cc) * jnp.exp(cum)[..., None]
+        # state update
+        decay_to_end = jnp.exp(total[:, None, :] - cum)          # (B,c,H)
+        contrib = jnp.einsum("bihp,bin->bhpn", dx * decay_to_end[..., None], bc)
+        state = jnp.exp(total)[..., None, None] * state + contrib
+        return state, y_intra + y_inter
+
+    state0 = (jnp.zeros((B, H, P, N), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    inputs = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+              bf.transpose(1, 0, 2, 3), cf.transpose(1, 0, 2, 3))
+    final, ys = lax.scan(chunk_step, state0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    y = y + d[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), final

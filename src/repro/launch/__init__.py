@@ -1,0 +1,8 @@
+"""repro.launch — mesh construction, multi-pod dry-run, train/serve
+drivers, HLO cost extraction. NOTE: importing ``repro.launch.dryrun`` sets
+XLA_FLAGS for 512 placeholder devices; never import it from tests or
+benchmarks."""
+
+from repro.launch.mesh import make_local_mesh, make_production_mesh, mesh_cfg_for
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_cfg_for"]

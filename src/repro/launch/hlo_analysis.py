@@ -1,0 +1,305 @@
+"""Call-graph-weighted cost extraction from compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+while-loop body (our layer scan) is not multiplied by its trip count, so raw
+numbers under-count a 126-layer model by ~126x. This parser rebuilds the
+call graph (ENTRY -> fusions / while bodies / to_apply reducers), reads each
+while's ``known_trip_count`` from its backend_config, and accumulates:
+
+* flops           — 2*M*N*K for dot/convolution (operand shapes resolved
+                    through the per-computation symbol table), 1/elem for
+                    everything else
+* hbm_bytes       — operand + result bytes of every *top-level* op in
+                    unfused computations (fusion internals are VMEM-only)
+* collective_bytes— per collective kind from result shapes:
+                    all-gather: result; all-reduce: 2x result;
+                    reduce-scatter: result x group; all-to-all /
+                    collective-permute: result
+  (per-chip traffic; the compiled module is already per-chip SPMD)
+
+All values are **per chip per step**.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# ops counted as HBM traffic (fusion-boundary model of a TPU schedule)
+_HBM_OPS = frozenset({
+    "dot", "convolution", "custom-call", "fusion", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "scatter", "gather",
+    "transpose", "concatenate", "slice", "select-and-scatter", "sort",
+    "cholesky", "triangular-solve", "fft", "pad", "reverse",
+} | set(COLLECTIVE_OPS))
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # text after the opening paren (operands + attrs)
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+
+    def __iadd__(self, o: "HloCost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        self.collective_count += o.collective_count
+        return self
+
+    def scaled(self, m: float) -> "HloCost":
+        return HloCost(self.flops * m, self.hbm_bytes * m,
+                       self.collective_bytes * m,
+                       {k: v * m for k, v in self.collectives.items()},
+                       int(self.collective_count * m))
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "collective_count": self.collective_count,
+        }
+
+
+def parse_hlo(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "{" in line:
+                cur = _Computation(m.group(1))
+                if line.startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        cur.ops.append(_Op(name, type_str.strip(), opcode, rest))
+        cur.symbols[name] = type_str.strip()
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_dims = _shape_dims(op.type_str) or []
+    out_elems = math.prod(out_dims) if out_dims else 1
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    ops = _OPERAND_RE.findall(op.rest.split(", lhs_contracting_dims")[0])
+    k = 1
+    mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if ops and mcd and ops[0] in comp.symbols:
+        lhs_dims = _shape_dims(comp.symbols[ops[0]])
+        if lhs_dims is not None and mcd.group(1):
+            for ci in mcd.group(1).split(","):
+                ci = int(ci)
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    out_elems = math.prod(_shape_dims(op.type_str) or [1])
+    ops = _OPERAND_RE.findall(op.rest)
+    k = 1
+    if len(ops) >= 2 and ops[1] in comp.symbols:
+        rhs = _shape_dims(comp.symbols[ops[1]]) or [1]
+        # OIHW-ish: everything but the output-feature dim contracts
+        k = max(1, math.prod(rhs) // max(1, max(rhs)))
+    return 2.0 * out_elems * k
+
+
+def _collective_bytes(op: _Op) -> float:
+    b = _shape_bytes(op.type_str)
+    g = 1
+    mg = _GROUPS_RE.search(op.rest)
+    if mg:
+        g = int(mg.group(2))
+    if op.opcode == "all-reduce":
+        return 2.0 * b * (g - 1) / max(1, g)
+    if op.opcode == "reduce-scatter":
+        return float(b * g)
+    if op.opcode == "all-gather":
+        return float(b)
+    return float(b)  # all-to-all, collective-permute
+
+
+def analyze(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    memo: Dict[str, HloCost] = {}
+
+    def cost_of(name: str, fused: bool) -> HloCost:
+        key = f"{name}|{fused}"
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        total = HloCost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                mb, mc = _BODY_RE.search(op.rest), _COND_RE.search(op.rest)
+                trip = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                elif mc:
+                    trip = _cond_trip_count(comps.get(mc.group(1))) or 1
+                inner = HloCost()
+                if mb:
+                    inner += cost_of(mb.group(1), False)
+                if mc:
+                    inner += cost_of(mc.group(1), False)
+                total += inner.scaled(trip)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                mcalls = _CALLS_RE.search(op.rest) or _APPLY_RE.search(op.rest)
+                if mcalls:
+                    total += cost_of(mcalls.group(1), True)
+                if not fused:
+                    total.hbm_bytes += _op_io_bytes(op, comp)
+                continue
+            if oc == "conditional":
+                for branch in re.findall(r"%([\w\.\-]+)", op.rest):
+                    if branch in comps:
+                        total += cost_of(branch, False)
+                continue
+            if oc in COLLECTIVE_OPS:
+                cb = _collective_bytes(op)
+                total.collective_bytes += cb
+                total.collectives[oc] = total.collectives.get(oc, 0.0) + cb
+                total.collective_count += 1
+                if not fused:
+                    total.hbm_bytes += _op_io_bytes(op, comp)
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+            elif oc == "convolution":
+                total.flops += _conv_flops(op, comp)
+            elif oc == "custom-call" and "matmul" in op.rest:
+                total.flops += _dot_flops(op, comp)
+            elif oc not in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast", "partition-id", "replica-id",
+                            "after-all", "iota", "convert", "copy"):
+                total.flops += math.prod(_shape_dims(op.type_str) or [1])
+            # HBM traffic: only ops that exist at fusion boundaries on TPU.
+            # XLA:CPU's bf16->f32 `convert`/`copy` scaffolding is excluded —
+            # on TPU those run natively in bf16 inside fusions.
+            if not fused and oc in _HBM_OPS:
+                total.hbm_bytes += _op_io_bytes(op, comp)
+        memo[key] = total
+        return total
+
+    return cost_of("__entry__", False)
+
+
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _cond_trip_count(comp: Optional[_Computation]) -> Optional[int]:
+    """Fallback trip count: the largest integer constant in the loop's
+    condition computation (induction variables start at 0 with step 1 in
+    XLA-lowered scans)."""
+    if comp is None:
+        return None
+    best = None
+    for op in comp.ops:
+        if op.opcode != "constant":
+            continue
+        m = _CONST_RE.search(op.type_str + " constant(" + op.rest)
+        if m:
+            v = int(m.group(1))
+            if best is None or v > best:
+                best = v
+    return best
+
+
+def _op_io_bytes(op: _Op, comp: _Computation) -> float:
+    b = float(_shape_bytes(op.type_str))
+    attr_cut = op.rest
+    for marker in ("metadata=", "backend_config=", "calls=", "to_apply=",
+                   "condition=", "body="):
+        idx = attr_cut.find(marker)
+        if idx >= 0:
+            attr_cut = attr_cut[:idx]
+    for operand in _OPERAND_RE.findall(attr_cut):
+        if operand in comp.symbols:
+            b += _shape_bytes(comp.symbols[operand])
+    return b

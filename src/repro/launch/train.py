@@ -1,0 +1,77 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b-smoke \
+        --steps 100 --batch 8 --seq 64 --optimizer adam --lr 1e-2
+
+Runs on whatever devices exist (CPU here, a TPU slice in production): the
+plan compiler picks the execution strategy for the *actual* mesh, exactly
+like SystemML picking single-node vs distributed plans per deployment.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.config import InputShape, MeshConfig, TrainConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.core.planner import compile_plan
+from repro.data import make_batch
+from repro.models.model import build_model
+from repro.runtime.metrics import StepTimer, format_metrics
+from repro.runtime.train_loop import (init_opt_state, make_train_step,
+                                      train_shardings)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b-smoke",
+                    help=f"one of {ARCH_IDS} (append -smoke for reduced)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+    model = build_model(cfg, dtype=dtype)
+
+    n_dev = len(jax.devices())
+    mesh_cfg = MeshConfig(shape=(n_dev,), axis_names=("data",))
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    train = TrainConfig(optimizer=args.optimizer, learning_rate=args.lr)
+    plan = compile_plan(cfg, shape, mesh_cfg, train)
+    print(plan.explain())
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = init_opt_state(args.optimizer, params, plan.config)
+    step_fn = jax.jit(make_train_step(model, plan.config, mesh_cfg, train))
+
+    timer = StepTimer(model=cfg, shape=shape, mesh=mesh_cfg)
+    for i in range(args.steps):
+        batch = make_batch(cfg, shape, step=i, dtype=dtype)
+        timer.start()
+        params, opt, metrics = step_fn(params, opt, batch, jnp.int32(i))
+        rec = timer.stop(i, metrics)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(format_metrics(rec), flush=True)
+
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"saved checkpoint to {args.checkpoint}")
+    summary = timer.summary()
+    print("summary:", format_metrics(summary))
+    assert np.isfinite(summary.get("loss", 0.0))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Shared model substrate: param-spec helpers, RMSNorm, RoPE, sharding ctx.
+
+Parameters travel as nested dicts of arrays; every param dict has a
+*parallel axes dict* whose leaves are tuples of logical axis names consumed
+by ``repro.core.sharding`` — the planner owns physical layout, the model
+owns logical structure (the SystemML separation of script from plan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import MeshConfig, ModelConfig
+from repro.core.sharding import spec_for
+from repro.core.strategies import PlanConfig
+
+
+# ---------------------------------------------------------------------------
+# ShardCtx: plan-driven sharding hints inside model code
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    plan: Optional[PlanConfig] = None
+    mesh_cfg: Optional[MeshConfig] = None
+
+    def constrain(self, x: jnp.ndarray, axes: Tuple[Optional[str], ...],
+                  kind: str = "act") -> jnp.ndarray:
+        if self.plan is None or self.mesh_cfg is None:
+            return x
+        if self.mesh_cfg.num_devices == 1:
+            return x  # LOCAL plan: nothing to constrain (no mesh in context)
+        spec = spec_for(tuple(x.shape), axes, self.plan, self.mesh_cfg, kind)
+        return lax.with_sharding_constraint(x, spec)
+
+    def ckpt_constrain(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Residual-checkpoint constraint: seq over 'model' when the plan
+        chose sequence-parallel remat checkpoints (Megatron SP). GSPMD
+        lowers the transition out of a TP region into a reduce-scatter."""
+        if self.plan is None or not self.plan.seq_shard_checkpoints:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        batch = self.plan.batch_axes or None
+        return lax.with_sharding_constraint(x, P(batch, "model", None))
+
+    def constrain_seq_model(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Pin dim-1 (seq) to the model axis, rest replicated-by-batch —
+        the SP-attention layout for archs whose heads don't divide the
+        model axis."""
+        if self.plan is None or self.mesh_cfg is None or self.mesh_cfg.num_devices == 1:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        batch = self.plan.batch_axes or None
+        return lax.with_sharding_constraint(
+            x, P(*([batch, "model"] + [None] * (x.ndim - 2))))
+
+    def seq_gather(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Megatron-SP region boundary: all-gather the seq dim at layer
+        entry so the TP dims (heads/ffn) are free to use the model axis —
+        without this, GSPMD resolves the axis conflict by gathering the
+        *weights* every layer (catastrophically worse)."""
+        if self.plan is None or not self.plan.seq_shard_checkpoints:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        batch = self.plan.batch_axes or None
+        return lax.with_sharding_constraint(
+            x, P(*([batch] + [None] * (x.ndim - 1))))
+
+
+NULL_CTX = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# param spec plumbing
+# ---------------------------------------------------------------------------
+
+
+class SpecBuilder:
+    """Collects (shape, axes, init) triples; materializes either
+    ShapeDtypeStructs (dry-run) or real initialized arrays (smoke/train)."""
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self.dtype = dtype
+        self.entries: Dict[str, Any] = {}
+
+    def add(self, name: str, shape: Tuple[int, ...],
+            axes: Tuple[Optional[str], ...], init: str = "normal",
+            scale: Optional[float] = None, dtype=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        self.entries[name] = (tuple(shape), tuple(axes), init, scale,
+                              dtype or self.dtype)
+        return self
+
+    def specs(self):
+        return {
+            k: jax.ShapeDtypeStruct(sh, dt)
+            for k, (sh, ax, ini, sc, dt) in self.entries.items()
+        }
+
+    def axes(self):
+        return {k: ax for k, (sh, ax, ini, sc, dt) in self.entries.items()}
+
+    def init(self, key):
+        out = {}
+        for k, (sh, ax, ini, sc, dt) in self.entries.items():
+            key, sub = jax.random.split(key)
+            if ini == "zeros":
+                out[k] = jnp.zeros(sh, dt)
+            elif ini == "ones":
+                out[k] = jnp.ones(sh, dt)
+            elif ini == "ssm_a":
+                # A_log init: log of uniform [1, 16] (mamba2 convention)
+                out[k] = jnp.log(
+                    jax.random.uniform(sub, sh, jnp.float32, 1.0, 16.0)
+                ).astype(dt)
+            else:
+                fan_in = sh[-2] if len(sh) >= 2 else sh[-1]
+                s = sc if sc is not None else 1.0 / math.sqrt(max(1, fan_in))
+                out[k] = (jax.random.normal(sub, sh, jnp.float32) * s).astype(dt)
+        return out
+
+
+def merge_trees(**subtrees):
+    return dict(subtrees)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(ms + eps)).astype(x.dtype) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def softmax_xent_logits(logits: jnp.ndarray, targets: jnp.ndarray,
+                        mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (..., V) bf16 -> fp32 mean xent over unmasked positions."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C).
+    With ``state`` (B, W-1, C): single-step decode (S==1) path returning
+    (y, new_state)."""
+    wd = w.shape[0]
+    if state is not None:
+        full = jnp.concatenate([state, x], axis=1)       # (B, W, C)
+        y = jnp.einsum("bwc,wc->bc", full[:, -wd:], w)[:, None, :]
+        return y, full[:, 1:]
+    pad = jnp.zeros(x.shape[:1] + (wd - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # stack of shifted views -> einsum (BLAS-3 form, no explicit loop conv)
+    views = jnp.stack([xp[:, i : i + x.shape[1]] for i in range(wd)], axis=0)
+    return jnp.einsum("wbsc,wc->bsc", views, w)

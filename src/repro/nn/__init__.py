@@ -1,0 +1,8 @@
+"""repro.nn — the SystemML NN library analogue (manual backward; DESIGN C2)."""
+
+from repro.nn import layers, loss, optim
+from repro.nn.module import Sequential
+from repro.nn.optim import OPTIMIZERS, get_optimizer, tree_init, tree_update
+
+__all__ = ["layers", "loss", "optim", "Sequential", "OPTIMIZERS",
+           "get_optimizer", "tree_init", "tree_update"]

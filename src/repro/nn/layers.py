@@ -1,0 +1,545 @@
+"""The NN library (paper §2) — layers with ``init``/``forward``/``backward``.
+
+SystemML 1.0 has **no automatic differentiation**: every layer in its NN
+library ships a hand-written backward pass in DML. This module reproduces
+that library faithfully in JAX: each layer is a namespace with
+
+    init(...)                 -> params
+    forward(X, ...)           -> out            (pure, matrix in/matrix out)
+    backward(dout, X, ...)    -> input/param gradients
+
+All activations flow as **linearized 2-D matrices** (paper §3 "Tensor
+Representation"): an [N, C, H, W] tensor travels as an (N, C*H*W) matrix;
+conv/pool layers take (C, H, W) metadata exactly like SystemML's
+``conv2d::forward(X, W, b, C, Hin, Win, ...)``.
+
+Every backward here is validated against ``jax.grad`` in
+``tests/test_nn_layers.py`` — the library never relies on autodiff at
+runtime, autodiff is only the test oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.linearize import conv2d_out_hw
+
+
+# ---------------------------------------------------------------------------
+# affine
+# ---------------------------------------------------------------------------
+
+class affine:
+    @staticmethod
+    def init(d: int, m: int, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        # SystemML: W ~ N(0, sqrt(2/D)) (He); b = 0
+        w = jax.random.normal(key, (d, m)) * math.sqrt(2.0 / d)
+        return w, jnp.zeros((1, m))
+
+    @staticmethod
+    def forward(x, w, b):
+        return x @ w + b
+
+    @staticmethod
+    def backward(dout, x, w, b):
+        dx = dout @ w.T
+        dw = x.T @ dout
+        db = jnp.sum(dout, axis=0, keepdims=True)
+        return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# elementwise activations
+# ---------------------------------------------------------------------------
+
+class relu:
+    @staticmethod
+    def forward(x):
+        return jnp.maximum(x, 0)
+
+    @staticmethod
+    def backward(dout, x):
+        return dout * (x > 0)
+
+
+class leaky_relu:
+    alpha = 0.01
+
+    @classmethod
+    def forward(cls, x):
+        return jnp.where(x > 0, x, cls.alpha * x)
+
+    @classmethod
+    def backward(cls, dout, x):
+        return dout * jnp.where(x > 0, 1.0, cls.alpha)
+
+
+class elu:
+    @staticmethod
+    def forward(x, alpha: float = 1.0):
+        return jnp.where(x > 0, x, alpha * (jnp.exp(x) - 1.0))
+
+    @staticmethod
+    def backward(dout, x, alpha: float = 1.0):
+        return dout * jnp.where(x > 0, 1.0, alpha * jnp.exp(x))
+
+
+class sigmoid:
+    @staticmethod
+    def forward(x):
+        return 1.0 / (1.0 + jnp.exp(-x))
+
+    @staticmethod
+    def backward(dout, x):
+        s = sigmoid.forward(x)
+        return dout * s * (1.0 - s)
+
+
+class tanh:
+    @staticmethod
+    def forward(x):
+        return jnp.tanh(x)
+
+    @staticmethod
+    def backward(dout, x):
+        t = jnp.tanh(x)
+        return dout * (1.0 - t * t)
+
+
+class gelu:
+    """tanh-approximate GELU (matches the transformer stack)."""
+
+    _c = math.sqrt(2.0 / math.pi)
+
+    @classmethod
+    def forward(cls, x):
+        inner = cls._c * (x + 0.044715 * x**3)
+        return 0.5 * x * (1.0 + jnp.tanh(inner))
+
+    @classmethod
+    def backward(cls, dout, x):
+        inner = cls._c * (x + 0.044715 * x**3)
+        t = jnp.tanh(inner)
+        dinner = cls._c * (1.0 + 3 * 0.044715 * x**2)
+        return dout * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * dinner)
+
+
+class softmax:
+    @staticmethod
+    def forward(x):
+        z = x - jnp.max(x, axis=1, keepdims=True)
+        e = jnp.exp(z)
+        return e / jnp.sum(e, axis=1, keepdims=True)
+
+    @staticmethod
+    def backward(dout, x):
+        p = softmax.forward(x)
+        return p * (dout - jnp.sum(dout * p, axis=1, keepdims=True))
+
+
+class log_softmax:
+    @staticmethod
+    def forward(x):
+        z = x - jnp.max(x, axis=1, keepdims=True)
+        return z - jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+
+    @staticmethod
+    def backward(dout, x):
+        p = softmax.forward(x)
+        return dout - p * jnp.sum(dout, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# dropout (inverted dropout, as in SystemML's nn/layers/dropout.dml)
+# ---------------------------------------------------------------------------
+
+class dropout:
+    @staticmethod
+    def forward(x, p: float, key):
+        mask = (jax.random.uniform(key, x.shape) > p) / (1.0 - p)
+        return x * mask, mask
+
+    @staticmethod
+    def backward(dout, mask):
+        return dout * mask
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+class batch_norm1d:
+    eps = 1e-5
+
+    @staticmethod
+    def init(d: int):
+        return jnp.ones((1, d)), jnp.zeros((1, d)), jnp.zeros((1, d)), jnp.ones((1, d))
+        # gamma, beta, running_mean, running_var
+
+    @staticmethod
+    def forward(x, gamma, beta, mode: str = "train",
+                running_mean=None, running_var=None, momentum: float = 0.9):
+        if mode == "train":
+            mu = jnp.mean(x, axis=0, keepdims=True)
+            var = jnp.var(x, axis=0, keepdims=True)
+            new_rm = momentum * running_mean + (1 - momentum) * mu if running_mean is not None else mu
+            new_rv = momentum * running_var + (1 - momentum) * var if running_var is not None else var
+        else:
+            mu, var = running_mean, running_var
+            new_rm, new_rv = running_mean, running_var
+        xhat = (x - mu) / jnp.sqrt(var + batch_norm1d.eps)
+        return gamma * xhat + beta, (xhat, mu, var), new_rm, new_rv
+
+    @staticmethod
+    def backward(dout, cache, x, gamma):
+        xhat, mu, var = cache
+        n = x.shape[0]
+        istd = 1.0 / jnp.sqrt(var + batch_norm1d.eps)
+        dgamma = jnp.sum(dout * xhat, axis=0, keepdims=True)
+        dbeta = jnp.sum(dout, axis=0, keepdims=True)
+        dxhat = dout * gamma
+        dx = istd / n * (n * dxhat - jnp.sum(dxhat, axis=0, keepdims=True)
+                         - xhat * jnp.sum(dxhat * xhat, axis=0, keepdims=True))
+        return dx, dgamma, dbeta
+
+
+class batch_norm2d:
+    """Spatial batch-norm on linearized (N, C*H*W) input."""
+
+    @staticmethod
+    def init(c: int):
+        return batch_norm1d.init(c)
+
+    @staticmethod
+    def forward(x, gamma, beta, c, h, w, mode="train",
+                running_mean=None, running_var=None, momentum=0.9):
+        n = x.shape[0]
+        # (N, C*H*W) -> (N*H*W, C): per-channel statistics
+        xc = x.reshape(n, c, h * w).transpose(0, 2, 1).reshape(n * h * w, c)
+        out, cache, rm, rv = batch_norm1d.forward(
+            xc, gamma, beta, mode, running_mean, running_var, momentum)
+        out = out.reshape(n, h * w, c).transpose(0, 2, 1).reshape(n, c * h * w)
+        return out, (cache, xc), rm, rv
+
+    @staticmethod
+    def backward(dout, cache, x, gamma, c, h, w):
+        inner_cache, xc = cache
+        n = x.shape[0]
+        doutc = dout.reshape(n, c, h * w).transpose(0, 2, 1).reshape(n * h * w, c)
+        dxc, dgamma, dbeta = batch_norm1d.backward(doutc, inner_cache, xc, gamma)
+        dx = dxc.reshape(n, h * w, c).transpose(0, 2, 1).reshape(n, c * h * w)
+        return dx, dgamma, dbeta
+
+
+class layer_norm:
+    eps = 1e-5
+
+    @staticmethod
+    def init(d: int):
+        return jnp.ones((1, d)), jnp.zeros((1, d))
+
+    @staticmethod
+    def forward(x, gamma, beta):
+        mu = jnp.mean(x, axis=1, keepdims=True)
+        var = jnp.var(x, axis=1, keepdims=True)
+        xhat = (x - mu) / jnp.sqrt(var + layer_norm.eps)
+        return gamma * xhat + beta, (xhat, var)
+
+    @staticmethod
+    def backward(dout, cache, x, gamma):
+        xhat, var = cache
+        d = x.shape[1]
+        istd = 1.0 / jnp.sqrt(var + layer_norm.eps)
+        dgamma = jnp.sum(dout * xhat, axis=0, keepdims=True)
+        dbeta = jnp.sum(dout, axis=0, keepdims=True)
+        dxhat = dout * gamma
+        dx = istd / d * (d * dxhat - jnp.sum(dxhat, axis=1, keepdims=True)
+                         - xhat * jnp.sum(dxhat * xhat, axis=1, keepdims=True))
+        return dx, dgamma, dbeta
+
+
+class rms_norm:
+    eps = 1e-5
+
+    @staticmethod
+    def init(d: int):
+        return (jnp.ones((1, d)),)
+
+    @staticmethod
+    def forward(x, gamma):
+        ms = jnp.mean(x * x, axis=1, keepdims=True)
+        inv = 1.0 / jnp.sqrt(ms + rms_norm.eps)
+        return gamma * x * inv, inv
+
+    @staticmethod
+    def backward(dout, inv, x, gamma):
+        d = x.shape[1]
+        dgamma = jnp.sum(dout * x * inv, axis=0, keepdims=True)
+        dxhat = dout * gamma
+        dx = inv * dxhat - (inv**3 / d) * x * jnp.sum(dxhat * x, axis=1, keepdims=True)
+        return dx, dgamma
+
+
+class scale_shift:
+    """SystemML nn/layers/scale_shift*.dml: out = gamma*x + beta."""
+
+    @staticmethod
+    def init(d: int):
+        return jnp.ones((1, d)), jnp.zeros((1, d))
+
+    @staticmethod
+    def forward(x, gamma, beta):
+        return gamma * x + beta
+
+    @staticmethod
+    def backward(dout, x, gamma):
+        return dout * gamma, jnp.sum(dout * x, 0, keepdims=True), jnp.sum(dout, 0, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+class embedding:
+    @staticmethod
+    def init(vocab: int, d: int, key):
+        return (jax.random.normal(key, (vocab, d)) * 0.02,)
+
+    @staticmethod
+    def forward(ids, table):
+        return table[ids]
+
+    @staticmethod
+    def backward(dout, ids, table):
+        return jnp.zeros_like(table).at[ids].add(dout)
+
+
+# ---------------------------------------------------------------------------
+# conv2d — im2col lowering (paper ref [5]) on linearized matrices
+# ---------------------------------------------------------------------------
+
+def im2col(x2d, c, h, w, kernel, stride, pad):
+    """(N, C*H*W) -> (N, Ho*Wo, C*k*k) patch matrix."""
+    n = x2d.shape[0]
+    x = x2d.reshape(n, c, h, w)
+    patches = lax.conv_general_dilated_patches(
+        x, (kernel, kernel), (stride, stride),
+        [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*k*k, Ho, Wo)
+    ho, wo = conv2d_out_hw(h, w, kernel, stride, pad)
+    return patches.reshape(n, c * kernel * kernel, ho * wo).transpose(0, 2, 1)
+
+
+class conv2d:
+    @staticmethod
+    def init(c: int, filters: int, kernel: int, key):
+        fan_in = c * kernel * kernel
+        w = jax.random.normal(key, (filters, fan_in)) * math.sqrt(2.0 / fan_in)
+        return w, jnp.zeros((filters, 1))
+
+    @staticmethod
+    def forward(x2d, w, b, c, h, w_in, kernel, stride, pad):
+        n = x2d.shape[0]
+        ho, wo = conv2d_out_hw(h, w_in, kernel, stride, pad)
+        cols = im2col(x2d, c, h, w_in, kernel, stride, pad)   # (N, HoWo, Ckk)
+        out = cols @ w.T + b.T                                 # (N, HoWo, F)
+        out = out.transpose(0, 2, 1).reshape(n, -1)            # (N, F*Ho*Wo)
+        return out, cols
+
+    @staticmethod
+    def backward(dout, cols, x2d, w, c, h, w_in, kernel, stride, pad):
+        n = x2d.shape[0]
+        f = w.shape[0]
+        ho, wo = conv2d_out_hw(h, w_in, kernel, stride, pad)
+        do_ = dout.reshape(n, f, ho * wo).transpose(0, 2, 1)    # (N, HoWo, F)
+        dw = jnp.einsum("npf,npk->fk", do_, cols)
+        db = jnp.sum(do_, axis=(0, 1))[:, None]
+        dcols = jnp.einsum("npf,fk->npk", do_, w)               # (N, HoWo, Ckk)
+        dx = col2im(dcols, c, h, w_in, kernel, stride, pad)
+        return dx, dw, db
+
+
+def col2im(dcols, c, h, w, kernel, stride, pad):
+    """Scatter-add patch gradients back to the (N, C*H*W) image — the
+    hand-derived transpose of im2col."""
+    n = dcols.shape[0]
+    ho, wo = conv2d_out_hw(h, w, kernel, stride, pad)
+    # (N, HoWo, C*k*k) -> (N, C, k, k, Ho, Wo)
+    d = dcols.transpose(0, 2, 1).reshape(n, c, kernel, kernel, ho, wo)
+    hp, wp = h + 2 * pad, w + 2 * pad
+    out = jnp.zeros((n, c, hp, wp), dcols.dtype)
+    for ki in range(kernel):
+        for kj in range(kernel):
+            patch = jnp.zeros((n, c, hp, wp), dcols.dtype)
+            patch = patch.at[
+                :, :, ki : ki + stride * ho : stride, kj : kj + stride * wo : stride
+            ].set(d[:, :, ki, kj])
+            out = out + patch
+    out = out[:, :, pad : pad + h, pad : pad + w]
+    return out.reshape(n, c * h * w)
+
+
+# ---------------------------------------------------------------------------
+# pooling (stride == pool, dims divisible — the SystemML demo-model cases)
+# ---------------------------------------------------------------------------
+
+class max_pool2d:
+    @staticmethod
+    def forward(x2d, c, h, w, pool):
+        n = x2d.shape[0]
+        x = x2d.reshape(n, c, h // pool, pool, w // pool, pool)
+        out = jnp.max(x, axis=(3, 5))
+        return out.reshape(n, -1), None
+
+    @staticmethod
+    def backward(dout, _cache, x2d, c, h, w, pool):
+        n = x2d.shape[0]
+        x = x2d.reshape(n, c, h // pool, pool, w // pool, pool)
+        mx = jnp.max(x, axis=(3, 5), keepdims=True)
+        mask = (x == mx).astype(x.dtype)
+        # split ties evenly (matches the subgradient; jax.grad does the same)
+        mask = mask / jnp.sum(mask, axis=(3, 5), keepdims=True)
+        d = dout.reshape(n, c, h // pool, 1, w // pool, 1)
+        return (mask * d).reshape(n, -1)
+
+
+class avg_pool2d:
+    @staticmethod
+    def forward(x2d, c, h, w, pool):
+        n = x2d.shape[0]
+        x = x2d.reshape(n, c, h // pool, pool, w // pool, pool)
+        return jnp.mean(x, axis=(3, 5)).reshape(n, -1), None
+
+    @staticmethod
+    def backward(dout, _cache, x2d, c, h, w, pool):
+        n = x2d.shape[0]
+        d = dout.reshape(n, c, h // pool, 1, w // pool, 1)
+        d = jnp.broadcast_to(d / (pool * pool),
+                             (n, c, h // pool, pool, w // pool, pool))
+        return d.reshape(n, -1)
+
+
+# ---------------------------------------------------------------------------
+# recurrent layers (simple RNN + LSTM), manual BPTT
+# ---------------------------------------------------------------------------
+
+class simple_rnn:
+    @staticmethod
+    def init(d: int, m: int, key):
+        k1, k2 = jax.random.split(key)
+        wx = jax.random.normal(k1, (d, m)) * math.sqrt(1.0 / d)
+        wh = jax.random.normal(k2, (m, m)) * math.sqrt(1.0 / m)
+        return wx, wh, jnp.zeros((1, m))
+
+    @staticmethod
+    def forward(x, wx, wh, b, h0):
+        """x: (N, T, D); returns (hs: (N, T, M), caches)."""
+
+        def step(h, xt):
+            a = xt @ wx + h @ wh + b
+            hn = jnp.tanh(a)
+            return hn, hn
+
+        hT, hs = lax.scan(step, h0, x.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2), hT
+
+    @staticmethod
+    def backward(dhs, x, wx, wh, b, h0):
+        """Manual BPTT (reverse scan over time)."""
+        hs, _ = simple_rnn.forward(x, wx, wh, b, h0)
+        n, t, m = dhs.shape
+        h0b = jnp.broadcast_to(h0, (n, m))[:, None, :]
+        hs_prev = jnp.concatenate([h0b, hs[:, :-1]], axis=1)
+
+        def step(carry, inp):
+            dh_next = carry
+            ht, hprev, xt, dht = inp
+            dh = dht + dh_next
+            da = dh * (1.0 - ht * ht)
+            dxt = da @ wx.T
+            dwx = xt.T @ da
+            dwh = hprev.T @ da
+            db = jnp.sum(da, axis=0, keepdims=True)
+            return da @ wh.T, (dxt, dwx, dwh, db)
+
+        seq = (hs.transpose(1, 0, 2)[::-1], hs_prev.transpose(1, 0, 2)[::-1],
+               x.transpose(1, 0, 2)[::-1], dhs.transpose(1, 0, 2)[::-1])
+        dh0, (dxs, dwxs, dwhs, dbs) = lax.scan(step, jnp.zeros((n, m)), seq)
+        return (dxs[::-1].transpose(1, 0, 2), dwxs.sum(0), dwhs.sum(0),
+                dbs.sum(0), dh0)
+
+
+class lstm:
+    @staticmethod
+    def init(d: int, m: int, key):
+        k1, k2 = jax.random.split(key)
+        wx = jax.random.normal(k1, (d, 4 * m)) * math.sqrt(1.0 / d)
+        wh = jax.random.normal(k2, (m, 4 * m)) * math.sqrt(1.0 / m)
+        return wx, wh, jnp.zeros((1, 4 * m))
+
+    @staticmethod
+    def _gates(a, m):
+        i = sigmoid.forward(a[:, :m])
+        f = sigmoid.forward(a[:, m : 2 * m])
+        o = sigmoid.forward(a[:, 2 * m : 3 * m])
+        g = jnp.tanh(a[:, 3 * m :])
+        return i, f, o, g
+
+    @staticmethod
+    def forward(x, wx, wh, b, h0, c0):
+        m = h0.shape[1]
+
+        def step(carry, xt):
+            h, c = carry
+            a = xt @ wx + h @ wh + b
+            i, f, o, g = lstm._gates(a, m)
+            cn = f * c + i * g
+            hn = o * jnp.tanh(cn)
+            return (hn, cn), (hn, cn, i, f, o, g)
+
+        (hT, cT), (hs, cs, i_, f_, o_, g_) = lax.scan(step, (h0, c0), x.transpose(1, 0, 2))
+        cache = (hs, cs, i_, f_, o_, g_)
+        return hs.transpose(1, 0, 2), (hT, cT), cache
+
+    @staticmethod
+    def backward(dhs, cache, x, wx, wh, b, h0, c0):
+        hs, cs, i_, f_, o_, g_ = cache
+        n, t, _ = dhs.shape
+        m = h0.shape[1]
+        hs_prev = jnp.concatenate([h0[None], hs[:-1]], axis=0)   # (T, N, M)
+        cs_prev = jnp.concatenate([c0[None], cs[:-1]], axis=0)
+
+        def step(carry, inp):
+            dh_next, dc_next = carry
+            (ht, ct, it, ft, ot, gt, hprev, cprev, xt, dht) = inp
+            dh = dht + dh_next
+            tc = jnp.tanh(ct)
+            do = dh * tc
+            dc = dc_next + dh * ot * (1 - tc * tc)
+            di = dc * gt
+            df = dc * cprev
+            dg = dc * it
+            da = jnp.concatenate(
+                [di * it * (1 - it), df * ft * (1 - ft),
+                 do * ot * (1 - ot), dg * (1 - gt * gt)], axis=1)
+            dxt = da @ wx.T
+            dwx = xt.T @ da
+            dwh = hprev.T @ da
+            db = jnp.sum(da, 0, keepdims=True)
+            return (da @ wh.T, dc * ft), (dxt, dwx, dwh, db)
+
+        seq = tuple(
+            arr[::-1]
+            for arr in (hs, cs, i_, f_, o_, g_, hs_prev, cs_prev,
+                        x.transpose(1, 0, 2), dhs.transpose(1, 0, 2))
+        )
+        (dh0, dc0), (dxs, dwxs, dwhs, dbs) = lax.scan(
+            step, (jnp.zeros((n, m)), jnp.zeros((n, m))), seq)
+        return (dxs[::-1].transpose(1, 0, 2), dwxs.sum(0), dwhs.sum(0),
+                dbs.sum(0), dh0, dc0)

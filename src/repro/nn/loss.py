@@ -1,0 +1,89 @@
+"""Loss layers, SystemML ``nn/layers/*_loss.dml`` style: forward returns the
+scalar loss, backward returns dScores."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class cross_entropy_loss:
+    """Expects probabilities (post-softmax), one-hot targets — exactly
+    SystemML's nn/layers/cross_entropy_loss.dml."""
+
+    eps = 1e-10
+
+    @staticmethod
+    def forward(probs, y):
+        n = probs.shape[0]
+        return -jnp.sum(y * jnp.log(probs + cross_entropy_loss.eps)) / n
+
+    @staticmethod
+    def backward(probs, y):
+        n = probs.shape[0]
+        return -(y / (probs + cross_entropy_loss.eps)) / n
+
+
+class softmax_cross_entropy:
+    """Fused logits->loss (numerically stable; used by the big models)."""
+
+    @staticmethod
+    def forward(logits, y):
+        n = logits.shape[0]
+        z = logits - jnp.max(logits, axis=1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+        return -jnp.sum(y * (z - lse)) / n
+
+    @staticmethod
+    def backward(logits, y):
+        n = logits.shape[0]
+        z = logits - jnp.max(logits, axis=1, keepdims=True)
+        p = jnp.exp(z) / jnp.sum(jnp.exp(z), axis=1, keepdims=True)
+        return (p - y) / n
+
+
+class l2_loss:
+    @staticmethod
+    def forward(pred, y):
+        n = pred.shape[0]
+        return 0.5 * jnp.sum((pred - y) ** 2) / n
+
+    @staticmethod
+    def backward(pred, y):
+        n = pred.shape[0]
+        return (pred - y) / n
+
+
+class log_loss:
+    eps = 1e-10
+
+    @staticmethod
+    def forward(pred, y):
+        n = pred.shape[0]
+        e = log_loss.eps
+        return -jnp.sum(y * jnp.log(pred + e) + (1 - y) * jnp.log(1 - pred + e)) / n
+
+    @staticmethod
+    def backward(pred, y):
+        n = pred.shape[0]
+        e = log_loss.eps
+        return (-(y / (pred + e)) + (1 - y) / (1 - pred + e)) / n
+
+
+class l2_reg:
+    @staticmethod
+    def forward(w, lam):
+        return 0.5 * lam * jnp.sum(w * w)
+
+    @staticmethod
+    def backward(w, lam):
+        return lam * w
+
+
+class l1_reg:
+    @staticmethod
+    def forward(w, lam):
+        return lam * jnp.sum(jnp.abs(w))
+
+    @staticmethod
+    def backward(w, lam):
+        return lam * jnp.sign(w)

@@ -1,0 +1,222 @@
+"""Sequential composer over the manual-backward layer library.
+
+This is the runtime for the scripts that ``repro.frontend.Keras2Plan``
+generates — the structural analogue of the DML training script in the
+paper's §2 (forward chain, backward chain in reverse, optimizer update),
+with zero reliance on jax autodiff.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linearize import conv2d_out_hw
+from repro.nn import layers as L
+from repro.nn import loss as LOSS
+from repro.nn.optim import get_optimizer
+
+
+@dataclass
+class LayerInstance:
+    kind: str
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    n_params: int = 0
+
+
+class Sequential:
+    """Build from a spec list (see repro/configs/lenet.py)."""
+
+    def __init__(self, spec: List[dict], meta: Dict[str, Any]):
+        self.spec = spec
+        self.meta = meta
+        self.layers: List[LayerInstance] = []
+        self._infer_shapes()
+
+    # -- shape inference over the linearized pipeline ----------------------
+    def _infer_shapes(self):
+        shape = self.meta["input_shape"]  # (C,H,W) or (D,)
+        for s in self.spec:
+            kind = s["kind"]
+            li = LayerInstance(kind, dict(s))
+            if kind == "conv2d":
+                c, h, w = shape
+                k, st, pd = s["kernel"], s.get("stride", 1), s.get("pad", 0)
+                ho, wo = conv2d_out_hw(h, w, k, st, pd)
+                li.attrs.update(c=c, h=h, w=w)
+                li.n_params = 2
+                shape = (s["filters"], ho, wo)
+            elif kind in ("max_pool2d", "avg_pool2d"):
+                c, h, w = shape
+                p = s["pool"]
+                li.attrs.update(c=c, h=h, w=w)
+                shape = (c, h // p, w // p)
+            elif kind == "affine":
+                d = int(math.prod(shape))
+                li.attrs.update(d=d)
+                li.n_params = 2
+                shape = (s["units"],)
+            elif kind in ("batch_norm1d",):
+                li.attrs.update(d=int(math.prod(shape)))
+                li.n_params = 2  # gamma, beta (+non-trainable running stats)
+            elif kind == "batch_norm2d":
+                c, h, w = shape
+                li.attrs.update(c=c, h=h, w=w)
+                li.n_params = 2
+            elif kind in ("relu", "leaky_relu", "elu", "sigmoid", "tanh",
+                          "gelu", "softmax", "log_softmax", "dropout"):
+                pass
+            else:
+                raise ValueError(f"unsupported layer kind {kind!r}")
+            li.attrs["out_shape"] = shape
+            self.layers.append(li)
+        self.out_shape = shape
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> List[Tuple]:
+        params: List[Tuple] = []
+        extras: List[Tuple] = []  # running stats etc.
+        for li in self.layers:
+            key, sub = jax.random.split(key)
+            if li.kind == "conv2d":
+                w, b = L.conv2d.init(li.attrs["c"], li.attrs["filters"],
+                                     li.attrs["kernel"], sub)
+                params.append((w, b)); extras.append(())
+            elif li.kind == "affine":
+                w, b = L.affine.init(li.attrs["d"], li.attrs["units"], sub)
+                params.append((w, b)); extras.append(())
+            elif li.kind == "batch_norm1d":
+                g, bt, rm, rv = L.batch_norm1d.init(li.attrs["d"])
+                params.append((g, bt)); extras.append((rm, rv))
+            elif li.kind == "batch_norm2d":
+                g, bt, rm, rv = L.batch_norm2d.init(li.attrs["c"])
+                params.append((g, bt)); extras.append((rm, rv))
+            else:
+                params.append(()); extras.append(())
+        self.extras = extras
+        return params
+
+    # -- forward (returns caches for manual backward) -----------------------
+    def forward(self, params, x, *, mode: str = "train", key=None):
+        caches = []
+        for li, p in zip(self.layers, params):
+            a = li.attrs
+            if li.kind == "conv2d":
+                out, cols = L.conv2d.forward(x, p[0], p[1], a["c"], a["h"], a["w"],
+                                             a["kernel"], a.get("stride", 1), a.get("pad", 0))
+                caches.append(("conv2d", x, cols)); x = out
+            elif li.kind == "affine":
+                out = L.affine.forward(x, p[0], p[1])
+                caches.append(("affine", x)); x = out
+            elif li.kind == "max_pool2d":
+                out, _ = L.max_pool2d.forward(x, a["c"], a["h"], a["w"], a["pool"])
+                caches.append(("max_pool2d", x)); x = out
+            elif li.kind == "avg_pool2d":
+                out, _ = L.avg_pool2d.forward(x, a["c"], a["h"], a["w"], a["pool"])
+                caches.append(("avg_pool2d", x)); x = out
+            elif li.kind == "dropout":
+                if mode == "train":
+                    key, sub = jax.random.split(key)
+                    out, mask = L.dropout.forward(x, a["p"], sub)
+                else:
+                    out, mask = x, jnp.ones_like(x)
+                caches.append(("dropout", mask)); x = out
+            elif li.kind in ("relu", "leaky_relu", "elu", "sigmoid", "tanh",
+                             "gelu", "softmax", "log_softmax"):
+                cls = getattr(L, li.kind)
+                out = cls.forward(x)
+                caches.append((li.kind, x)); x = out
+            elif li.kind == "batch_norm1d":
+                out, cache, _, _ = L.batch_norm1d.forward(
+                    x, p[0], p[1], mode, *self.extras[len(caches)])
+                caches.append(("batch_norm1d", x, cache)); x = out
+            elif li.kind == "batch_norm2d":
+                out, cache, _, _ = L.batch_norm2d.forward(
+                    x, p[0], p[1], a["c"], a["h"], a["w"], mode,
+                    *self.extras[len(caches)])
+                caches.append(("batch_norm2d", x, cache)); x = out
+        return x, caches
+
+    # -- backward (reverse chain, hand-written grads) ------------------------
+    def backward(self, params, caches, dout):
+        grads: List[Tuple] = [None] * len(self.layers)
+        for i in reversed(range(len(self.layers))):
+            li, p, cache = self.layers[i], params[i], caches[i]
+            a = li.attrs
+            if li.kind == "conv2d":
+                _, x, cols = cache
+                dout, dw, db = L.conv2d.backward(dout, cols, x, p[0], a["c"], a["h"],
+                                                 a["w"], a["kernel"],
+                                                 a.get("stride", 1), a.get("pad", 0))
+                grads[i] = (dw, db)
+            elif li.kind == "affine":
+                _, x = cache
+                dout, dw, db = L.affine.backward(dout, x, p[0], p[1])
+                grads[i] = (dw, db)
+            elif li.kind == "max_pool2d":
+                _, x = cache
+                dout = L.max_pool2d.backward(dout, None, x, a["c"], a["h"], a["w"], a["pool"])
+                grads[i] = ()
+            elif li.kind == "avg_pool2d":
+                _, x = cache
+                dout = L.avg_pool2d.backward(dout, None, x, a["c"], a["h"], a["w"], a["pool"])
+                grads[i] = ()
+            elif li.kind == "dropout":
+                _, mask = cache
+                dout = L.dropout.backward(dout, mask)
+                grads[i] = ()
+            elif li.kind in ("relu", "leaky_relu", "elu", "sigmoid", "tanh",
+                             "gelu", "softmax", "log_softmax"):
+                _, x = cache
+                dout = getattr(L, li.kind).backward(dout, x)
+                grads[i] = ()
+            elif li.kind == "batch_norm1d":
+                _, x, c = cache
+                dout, dg, db = L.batch_norm1d.backward(dout, c, x, p[0])
+                grads[i] = (dg, db)
+            elif li.kind == "batch_norm2d":
+                _, x, c = cache
+                dout, dg, db = L.batch_norm2d.backward(dout, c, x, p[0], a["c"], a["h"], a["w"])
+                grads[i] = (dg, db)
+        return dout, grads
+
+    # -- the paper's §2 training loop -----------------------------------------
+    def make_train_step(self, optimizer: str = "sgd", lr: float = 0.01,
+                        loss: str = "cross_entropy"):
+        opt = get_optimizer(optimizer)
+
+        def train_step(params, opt_state, x, y, key, t=1):
+            probs, caches = self.forward(params, x, mode="train", key=key)
+            if loss == "cross_entropy":
+                l = LOSS.cross_entropy_loss.forward(probs, y)
+                dprobs = LOSS.cross_entropy_loss.backward(probs, y)
+            elif loss == "l2":
+                l = LOSS.l2_loss.forward(probs, y)
+                dprobs = LOSS.l2_loss.backward(probs, y)
+            else:
+                raise ValueError(loss)
+            _, grads = self.backward(params, caches, dprobs)
+            new_params, new_state = [], []
+            for p, g, s in zip(params, grads, opt_state):
+                if not p:
+                    new_params.append(p); new_state.append(s); continue
+                ps, ss = [], []
+                for pj, gj, sj in zip(p, g, s):
+                    pn, sn = opt.update(pj, gj, sj, lr=lr, t=t)
+                    ps.append(pn); ss.append(sn)
+                new_params.append(tuple(ps)); new_state.append(tuple(ss))
+            return new_params, new_state, l
+
+        return train_step
+
+    def init_opt_state(self, optimizer: str, params):
+        opt = get_optimizer(optimizer)
+        return [tuple(opt.init(pj) for pj in p) if p else () for p in params]
+
+    def predict(self, params, x):
+        out, _ = self.forward(params, x, mode="test")
+        return out

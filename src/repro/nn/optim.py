@@ -1,0 +1,163 @@
+"""The paper's six optimizers (§2: "6 optimizers, namely Adagrad, Adam,
+RMSprop, SGD, SGD with momentum, and SGD with Nesterov momentum").
+
+Each optimizer follows the SystemML ``nn/optim/*.dml`` interface:
+
+    init(param)                          -> state
+    update(param, grad, state, hypers)   -> new_param, new_state
+
+and operates leaf-wise; :func:`tree_update` maps over pytrees. A state leaf
+may live in a reduced dtype when the plan compiler chose opt-state
+compression (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like(p, dtype=None):
+    return jnp.zeros_like(p, dtype=dtype or p.dtype)
+
+
+class sgd:
+    slots = 0
+
+    @staticmethod
+    def init(p, dtype=None):
+        return ()
+
+    @staticmethod
+    def update(p, g, state, lr=0.01, **_):
+        return p - lr * g, ()
+
+
+class sgd_momentum:
+    slots = 1
+
+    @staticmethod
+    def init(p, dtype=None):
+        return (_zeros_like(p, dtype),)
+
+    @staticmethod
+    def update(p, g, state, lr=0.01, mu=0.9, **_):
+        (v,) = state
+        v = (mu * v - lr * g).astype(v.dtype)
+        return p + v, (v,)
+
+
+class sgd_nesterov:
+    slots = 1
+
+    @staticmethod
+    def init(p, dtype=None):
+        return (_zeros_like(p, dtype),)
+
+    @staticmethod
+    def update(p, g, state, lr=0.01, mu=0.9, **_):
+        (v,) = state
+        v_prev = v
+        v = (mu * v - lr * g).astype(v.dtype)
+        return p - mu * v_prev + (1 + mu) * v, (v,)
+
+
+class adagrad:
+    slots = 1
+
+    @staticmethod
+    def init(p, dtype=None):
+        return (_zeros_like(p, dtype),)
+
+    @staticmethod
+    def update(p, g, state, lr=0.01, eps=1e-6, **_):
+        (c,) = state
+        c = (c + g * g).astype(c.dtype)
+        return p - lr * g / (jnp.sqrt(c.astype(g.dtype)) + eps), (c,)
+
+
+class rmsprop:
+    slots = 1
+
+    @staticmethod
+    def init(p, dtype=None):
+        return (_zeros_like(p, dtype),)
+
+    @staticmethod
+    def update(p, g, state, lr=0.01, decay=0.99, eps=1e-8, **_):
+        (c,) = state
+        c = (decay * c + (1 - decay) * g * g).astype(c.dtype)
+        return p - lr * g / (jnp.sqrt(c.astype(g.dtype)) + eps), (c,)
+
+
+class adam:
+    slots = 2
+
+    @staticmethod
+    def init(p, dtype=None):
+        return (_zeros_like(p, dtype), _zeros_like(p, dtype))
+
+    @staticmethod
+    def update(p, g, state, lr=0.001, beta1=0.9, beta2=0.999, eps=1e-8, t=1, **_):
+        m, v = state
+        m = (beta1 * m + (1 - beta1) * g).astype(m.dtype)
+        v = (beta2 * v + (1 - beta2) * g * g).astype(v.dtype)
+        mhat = m.astype(g.dtype) / (1 - beta1**t)
+        vhat = v.astype(g.dtype) / (1 - beta2**t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps), (m, v)
+
+
+OPTIMIZERS: Dict[str, Any] = {
+    "sgd": sgd,
+    "sgd_momentum": sgd_momentum,
+    "sgd_nesterov": sgd_nesterov,
+    "adagrad": adagrad,
+    "rmsprop": rmsprop,
+    "adam": adam,
+}
+
+
+OPTIMIZER_SLOTS: Dict[str, int] = {k: v.slots for k, v in OPTIMIZERS.items()}
+
+
+def get_optimizer(name: str):
+    if name not in OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; known: {list(OPTIMIZERS)}")
+    return OPTIMIZERS[name]
+
+
+# ---------------------------------------------------------------------------
+# pytree-level helpers (used by runtime.train_loop for the big models)
+# ---------------------------------------------------------------------------
+
+
+def tree_init(name: str, params, dtype=None):
+    opt = get_optimizer(name)
+    return jax.tree.map(lambda p: opt.init(p, dtype=dtype), params,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+
+def tree_update(name: str, params, grads, state, **hypers):
+    opt = get_optimizer(name)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state)
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        np_, ns = opt.update(p, g, s, **hypers)
+        new_p.append(np_.astype(p.dtype))
+        new_s.append(ns)
+    return treedef.unflatten(new_p), treedef.unflatten(new_s)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), n

@@ -1,0 +1,53 @@
+"""Step metrics / throughput accounting."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig, TPU_V5E
+from repro.core.cost import model_flops_per_step
+
+
+@dataclass
+class StepTimer:
+    model: Optional[ModelConfig] = None
+    shape: Optional[InputShape] = None
+    mesh: Optional[MeshConfig] = None
+    hw: HardwareSpec = TPU_V5E
+    history: List[Dict] = field(default_factory=list)
+    _t0: float = 0.0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int, metrics: Dict) -> Dict:
+        dt = time.perf_counter() - self._t0
+        rec = {"step": step, "seconds": dt}
+        rec.update({k: float(v) for k, v in metrics.items()})
+        if self.model is not None and self.shape is not None:
+            flops = model_flops_per_step(self.model, self.shape)
+            rec["tokens_per_s"] = self.shape.global_batch * self.shape.seq_len / dt
+            if self.mesh is not None:
+                rec["mfu"] = flops / dt / (self.mesh.num_devices * self.hw.peak_flops)
+        self.history.append(rec)
+        return rec
+
+    def summary(self) -> Dict:
+        if not self.history:
+            return {}
+        n = len(self.history)
+        keys = self.history[-1].keys()
+        return {k: sum(h.get(k, 0.0) for h in self.history) / n
+                for k in keys if k != "step"}
+
+
+def format_metrics(rec: Dict) -> str:
+    parts = []
+    for k, v in rec.items():
+        if isinstance(v, float):
+            parts.append(f"{k}={v:.4g}")
+        else:
+            parts.append(f"{k}={v}")
+    return "  ".join(parts)

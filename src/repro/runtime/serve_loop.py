@@ -1,0 +1,62 @@
+"""Serving runtime: prefill + batched decode under a plan.
+
+The decode step is the paper's "low-latency scoring" end of the
+"ranging from low-latency scoring to large-scale training" claim; batched
+request scoring uses the parfor engine (``test_algo="allreduce"``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import MeshConfig
+from repro.core.sharding import spec_for, tree_specs
+from repro.core.strategies import PlanConfig
+from repro.models.common import ShardCtx
+
+
+def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig):
+    ctx = ShardCtx(plan, mesh_cfg)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ctx)
+
+    return decode_step
+
+
+def make_prefill(model, plan: PlanConfig, mesh_cfg: MeshConfig):
+    ctx = ShardCtx(plan, mesh_cfg)
+
+    def prefill(params, batch):
+        extra = {k: v for k, v in batch.items() if k != "tokens"}
+        return model.prefill(params, batch["tokens"], extra=extra, ctx=ctx)
+
+    return prefill
+
+
+def cache_shardings(model, batch: int, seq_len: int, plan: PlanConfig,
+                    mesh_cfg: MeshConfig, mesh):
+    specs, axes = model.cache_specs(batch, seq_len)
+    parts = tree_specs(specs, axes, plan, mesh_cfg, "cache")
+    shards = jax.tree.map(lambda sp: NamedSharding(mesh, sp), parts,
+                          is_leaf=lambda x: isinstance(x, P))
+    return specs, parts, shards
+
+
+def greedy_decode(model, params, cache, first_token, start_pos, num_tokens,
+                  decode_step=None):
+    """Greedy generation loop (example/driver use)."""
+    step = decode_step or (lambda p, c, t, q: model.decode_step(p, c, t, q))
+    toks = first_token
+    out = []
+    pos = start_pos
+    for _ in range(num_tokens):
+        logits, cache = step(params, cache, toks, jnp.int32(pos))
+        toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(toks)
+        pos += 1
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,152 @@
+"""Training runtime: plan-driven train-step construction.
+
+``make_train_step`` turns (model, ExecutionPlan, TrainConfig) into a jit-able
+step function whose gradient accumulation, optimizer-state dtype and
+sharding constraints all come from the *plan* — the model code never sees
+the mesh. This is the runtime half of the paper's compiler: SystemML's
+generated execution plan, here realized as a jitted SPMD program.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, TrainConfig
+from repro.core.sharding import spec_for, tree_specs
+from repro.core.strategies import PlanConfig
+from repro.models.common import ShardCtx
+from repro.nn.optim import OPTIMIZER_SLOTS, clip_by_global_norm, get_optimizer
+
+
+# ---------------------------------------------------------------------------
+# optimizer state plumbing (pytree-of-dict params)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_dtype(plan: PlanConfig):
+    return jnp.float32 if plan.opt_state_dtype == "float32" else jnp.bfloat16
+
+
+def init_opt_state(optimizer: str, params: Dict, plan: PlanConfig) -> Dict:
+    opt = get_optimizer(optimizer)
+    dt = opt_state_dtype(plan)
+    return {k: opt.init(v, dtype=dt) for k, v in params.items()}
+
+
+def opt_state_specs(optimizer: str, param_specs: Dict, plan: PlanConfig) -> Dict:
+    slots = OPTIMIZER_SLOTS[optimizer]
+    dt = opt_state_dtype(plan)
+    return {
+        k: tuple(jax.ShapeDtypeStruct(s.shape, dt) for _ in range(slots))
+        for k, s in param_specs.items()
+    }
+
+
+def opt_state_axes(optimizer: str, param_axes: Dict) -> Dict:
+    slots = OPTIMIZER_SLOTS[optimizer]
+    return {k: tuple(ax for _ in range(slots)) for k, ax in param_axes.items()}
+
+
+# ---------------------------------------------------------------------------
+# batch sharding specs
+# ---------------------------------------------------------------------------
+
+BATCH_AXES_BY_RANK = {
+    2: ("batch", "seq"),
+    3: ("batch", "seq", None),
+}
+
+
+def batch_specs(batch_like: Dict, plan: PlanConfig, mesh_cfg: MeshConfig) -> Dict:
+    out = {}
+    for k, v in batch_like.items():
+        axes = BATCH_AXES_BY_RANK.get(len(v.shape), ("batch",) + (None,) * (len(v.shape) - 1))
+        if k in ("frames", "patch_embeds"):
+            axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = spec_for(tuple(v.shape), axes, plan, mesh_cfg, "act")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, plan: PlanConfig, mesh_cfg: MeshConfig,
+                    train: TrainConfig):
+    ctx = ShardCtx(plan, mesh_cfg)
+    opt_name = train.optimizer
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if plan.microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        m = plan.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(m, b // m, *x.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / m,
+                               acc, grads)
+            return (acc, loss_sum + loss / m), None
+
+        (grads, loss), _ = jax.lax.scan(body, (acc0, jnp.float32(0.0)), micro)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return loss, {"xent": loss, "aux": jnp.float32(0.0)}, grads
+
+    def train_step(params, opt_state, batch, step):
+        loss, metrics, grads = compute_grads(params, batch)
+        if train.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, train.grad_clip)
+        else:
+            gnorm = jnp.float32(0.0)
+        opt = get_optimizer(opt_name)
+        new_params, new_state = {}, {}
+        for k, p in params.items():
+            np_, ns = opt.update(p, grads[k], opt_state[k],
+                                 lr=train.learning_rate, t=step + 1)
+            new_params[k] = np_.astype(p.dtype)
+            new_state[k] = ns
+        out_metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_state, out_metrics
+
+    return train_step
+
+
+def train_shardings(model, plan: PlanConfig, mesh_cfg: MeshConfig,
+                    train: TrainConfig, mesh):
+    """(param_specs/shardings, opt_specs/shardings) for jit in_shardings."""
+    from jax.sharding import NamedSharding
+
+    pspecs = model.param_specs()
+    paxes = model.param_axes()
+    p_part = tree_specs(pspecs, paxes, plan, mesh_cfg, "param")
+    o_specs = opt_state_specs(train.optimizer, pspecs, plan)
+    o_axes = opt_state_axes(train.optimizer, paxes)
+    o_part = {
+        k: tuple(spec_for(tuple(s.shape), a, plan, mesh_cfg, "opt")
+                 for s, a in zip(o_specs[k], o_axes[k]))
+        for k in o_specs
+    }
+    as_shard = lambda tree: jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                                         is_leaf=lambda x: isinstance(x, P))
+    return (pspecs, p_part, as_shard(p_part)), (o_specs, o_part, as_shard(o_part))

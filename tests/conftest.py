@@ -1,0 +1,30 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run owns the 512-device setup; see
+# src/repro/launch/dryrun.py). Multi-device behaviours are tested through
+# subprocesses that set XLA_FLAGS before importing jax.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MULTIDEV_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import sys
+sys.path.insert(0, {src!r})
+"""
+
+
+def multidev_script(body: str, n: int = 8) -> str:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    return MULTIDEV_PRELUDE.format(n=n, src=os.path.abspath(src)) + body
+
+
+def run_multidev(body: str, n: int = 8, timeout: int = 300) -> str:
+    import subprocess
+
+    r = subprocess.run(
+        [sys.executable, "-c", multidev_script(body, n)],
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout

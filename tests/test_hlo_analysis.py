@@ -1,0 +1,84 @@
+"""The call-graph-weighted HLO cost parser (launch.hlo_analysis) on a
+static fixture: while-loop trip-count multiplication, dot FLOPs through
+the symbol table, and collective byte accounting."""
+
+from repro.launch import hlo_analysis as H
+
+FIXTURE = """
+HloModule jit_step, num_partitions=8
+
+%body (param: (s32[], f32[32,64], f32[6,256,64])) -> (s32[], f32[32,64], f32[6,256,64]) {
+  %param = (s32[], f32[32,64]{1,0}, f32[6,256,64]{2,1,0}) parameter(0)
+  %constant.10 = s32[] constant(1)
+  %gte2 = f32[6,256,64]{2,1,0} get-tuple-element(%param), index=2
+  %gte1 = f32[32,64]{1,0} get-tuple-element(%param), index=1
+  %gte0 = s32[] get-tuple-element(%param), index=0
+  %copy = f32[32,64]{0,1} copy(%gte1)
+  %all-gather = f32[32,256]{0,1} all-gather(%copy), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  %wslice = f32[256,64]{1,0} slice(%gte2), slice={[0:1], [0:256], [0:64]}
+  %dot = f32[32,64]{1,0} dot(%all-gather, %wslice), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %add = s32[] add(%gte0, %constant.10)
+  ROOT %tuple.6 = (s32[], f32[32,64]{1,0}, f32[6,256,64]{2,1,0}) tuple(%add, %dot, %gte2)
+}
+
+%cond (param.1: (s32[], f32[32,64], f32[6,256,64])) -> pred[] {
+  %param.1 = (s32[], f32[32,64]{1,0}, f32[6,256,64]{2,1,0}) parameter(0)
+  %constant.18 = s32[] constant(6)
+  %gte = s32[] get-tuple-element(%param.1), index=0
+  ROOT %lt = pred[] compare(%gte, %constant.18), direction=LT
+}
+
+ENTRY %main (p0: f32[6,256,64], p1: f32[32,64]) -> f32[] {
+  %p0 = f32[6,256,64]{2,1,0} parameter(0)
+  %p1 = f32[32,64]{1,0} parameter(1)
+  %c0 = s32[] constant(0)
+  %tuple.4 = (s32[], f32[32,64]{1,0}, f32[6,256,64]{2,1,0}) tuple(%c0, %p1, %p0)
+  %while.8 = (s32[], f32[32,64]{1,0}, f32[6,256,64]{2,1,0}) while(%tuple.4), condition=%cond, body=%body
+  %gtew = f32[32,64]{1,0} get-tuple-element(%while.8), index=1
+  %reduced = f32[] reduce(%gtew, %c0), dimensions={0,1}, to_apply=%cond
+  ROOT %all-reduce = f32[] all-reduce(%reduced), channel_id=2, replica_groups=[2,4]<=[8]
+}
+"""
+
+
+def test_trip_count_from_condition_constant():
+    cost = H.analyze(FIXTURE)
+    # dot: 2*32*64*256 flops, 6 trips
+    dot_flops = 2 * 32 * 64 * 256 * 6
+    assert cost.flops >= dot_flops
+    assert cost.flops < dot_flops * 1.2  # small elementwise overhead only
+
+
+def test_collectives_counted_with_loop_multiplier():
+    cost = H.analyze(FIXTURE)
+    ag_bytes = 32 * 256 * 4 * 6        # in-loop all-gather x 6
+    ar_bytes = 2 * 4 * 3 // 4          # scalar all-reduce (2x(g-1)/g)
+    assert cost.collectives["all-gather"] == ag_bytes
+    assert abs(cost.collectives["all-reduce"] - ar_bytes) <= 8
+    assert cost.collective_count == 6 + 1
+
+
+def test_known_trip_count_backend_config_preferred():
+    txt = FIXTURE.replace(
+        "body=%body",
+        'body=%body, backend_config={"known_trip_count":{"n":"3"}}')
+    cost = H.analyze(txt)
+    assert cost.collectives["all-gather"] == 32 * 256 * 4 * 3
+
+
+def test_shape_bytes_tuple_types():
+    assert H._shape_bytes("f32[4,4]{1,0}") == 64
+    assert H._shape_bytes("bf16[8]{0}") == 16
+    assert H._shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_math():
+    from repro.config import TPU_V5E
+    from repro.core.cost import roofline_terms
+
+    t = roofline_terms(197e12, 819e9, 50e9, 1, TPU_V5E, per_chip=True)
+    assert abs(t.compute_s - 1.0) < 1e-6
+    assert abs(t.memory_s - 1.0) < 1e-6
+    assert abs(t.collective_s - 1.0) < 1e-6
+    assert t.dominant in ("compute", "memory", "collective")

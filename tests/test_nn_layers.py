@@ -1,0 +1,194 @@
+"""Every manual backward in the DML-style NN library is validated against
+jax.grad (the library itself never uses autodiff — paper §2, SystemML 1.0
+has none)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import layers as L  # noqa: E402
+from repro.nn import loss as LOSS  # noqa: E402
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _check(got, want, rtol=3e-4, atol=1e-5):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=atol)
+
+
+def test_affine_backward():
+    x = jax.random.normal(KEY, (8, 5))
+    w, b = L.affine.init(5, 3, KEY)
+    dout = jax.random.normal(KEY, (8, 3))
+    got = L.affine.backward(dout, x, w, b)
+    want = jax.grad(lambda x, w, b: jnp.sum(L.affine.forward(x, w, b) * dout),
+                    argnums=(0, 1, 2))(x, w, b)
+    _check(got, want)
+
+
+@pytest.mark.parametrize("name", ["relu", "leaky_relu", "elu", "sigmoid",
+                                  "tanh", "gelu", "softmax", "log_softmax"])
+def test_elementwise_backward(name):
+    cls = getattr(L, name)
+    x = jax.random.normal(KEY, (6, 7)) * 2
+    dout = jax.random.normal(jax.random.PRNGKey(1), (6, 7))
+    got = cls.backward(dout, x)
+    want = jax.grad(lambda x: jnp.sum(cls.forward(x) * dout))(x)
+    _check(got, want, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("kern,stride,pad", [(3, 1, 1), (5, 2, 2), (3, 2, 0)])
+def test_conv2d_backward(kern, stride, pad):
+    c, h, w = 3, 8, 8
+    x = jax.random.normal(KEY, (4, c * h * w))
+    cw, cb = L.conv2d.init(c, 6, kern, KEY)
+    out, cols = L.conv2d.forward(x, cw, cb, c, h, w, kern, stride, pad)
+    dout = jax.random.normal(KEY, out.shape)
+    dx, dw, db = L.conv2d.backward(dout, cols, x, cw, c, h, w, kern, stride, pad)
+    ax, aw, ab = jax.grad(
+        lambda a, b_, c_: jnp.sum(L.conv2d.forward(a, b_, c_, c, h, w, kern,
+                                                   stride, pad)[0] * dout),
+        argnums=(0, 1, 2))(x, cw, cb)
+    _check((dx, dw, db), (ax, aw, ab))
+
+
+@pytest.mark.parametrize("cls_name", ["max_pool2d", "avg_pool2d"])
+def test_pool_backward(cls_name):
+    cls = getattr(L, cls_name)
+    c, h, w, pool = 2, 8, 8, 2
+    x = jax.random.normal(KEY, (3, c * h * w))
+    out, _ = cls.forward(x, c, h, w, pool)
+    dout = jax.random.normal(KEY, out.shape)
+    dx = cls.backward(dout, None, x, c, h, w, pool)
+    ax = jax.grad(lambda a: jnp.sum(cls.forward(a, c, h, w, pool)[0] * dout))(x)
+    _check(dx, ax)
+
+
+def test_batch_norm1d_backward():
+    x = jax.random.normal(KEY, (16, 5))
+    g, b, rm, rv = L.batch_norm1d.init(5)
+    out, cache, _, _ = L.batch_norm1d.forward(x, g, b, "train", rm, rv)
+    dout = jax.random.normal(KEY, out.shape)
+    dx, dg, db = L.batch_norm1d.backward(dout, cache, x, g)
+
+    def f(x, g, b):
+        return jnp.sum(L.batch_norm1d.forward(x, g, b, "train", rm, rv)[0] * dout)
+
+    ax, ag, ab = jax.grad(f, argnums=(0, 1, 2))(x, g, b)
+    _check((dx, dg, db), (ax, ag, ab), rtol=1e-3, atol=1e-5)
+
+
+def test_batch_norm2d_backward():
+    c, h, w = 3, 4, 4
+    x = jax.random.normal(KEY, (5, c * h * w))
+    g, b, rm, rv = L.batch_norm2d.init(c)
+    out, cache, _, _ = L.batch_norm2d.forward(x, g, b, c, h, w, "train", rm, rv)
+    dout = jax.random.normal(KEY, out.shape)
+    dx, dg, db = L.batch_norm2d.backward(dout, cache, x, g, c, h, w)
+    ax, ag, ab = jax.grad(
+        lambda x, g, b: jnp.sum(
+            L.batch_norm2d.forward(x, g, b, c, h, w, "train", rm, rv)[0] * dout),
+        argnums=(0, 1, 2))(x, g, b)
+    _check((dx, dg, db), (ax, ag, ab), rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("cls_name", ["layer_norm", "rms_norm"])
+def test_norm_backward(cls_name):
+    cls = getattr(L, cls_name)
+    x = jax.random.normal(KEY, (6, 7))
+    params = cls.init(7)
+    out = cls.forward(x, *params)
+    dout = jax.random.normal(KEY, out[0].shape)
+    if cls_name == "layer_norm":
+        dx, dg, db = cls.backward(dout, out[1], x, params[0])
+        want = jax.grad(lambda x, g, b: jnp.sum(cls.forward(x, g, b)[0] * dout),
+                        argnums=(0, 1, 2))(x, *params)
+        _check((dx, dg, db), want, rtol=1e-3, atol=1e-5)
+    else:
+        dx, dg = cls.backward(dout, out[1], x, params[0])
+        want = jax.grad(lambda x, g: jnp.sum(cls.forward(x, g)[0] * dout),
+                        argnums=(0, 1))(x, *params)
+        _check((dx, dg), want, rtol=1e-3, atol=1e-5)
+
+
+def test_scale_shift_backward():
+    x = jax.random.normal(KEY, (6, 7))
+    g, b = L.scale_shift.init(7)
+    dout = jax.random.normal(KEY, x.shape)
+    got = L.scale_shift.backward(dout, x, g)
+    want = jax.grad(lambda x, g, b: jnp.sum(L.scale_shift.forward(x, g, b) * dout),
+                    argnums=(0, 1, 2))(x, g, b)
+    _check(got, want)
+
+
+def test_embedding_backward():
+    table, = L.embedding.init(11, 4, KEY)
+    ids = jnp.array([1, 3, 3, 0])
+    dout = jax.random.normal(KEY, (4, 4))
+    got = L.embedding.backward(dout, ids, table)
+    want = jax.grad(lambda t: jnp.sum(L.embedding.forward(ids, t) * dout))(table)
+    _check(got, want)
+
+
+def test_dropout_backward_and_scaling():
+    x = jnp.ones((400, 10))
+    out, mask = L.dropout.forward(x, 0.3, KEY)
+    # inverted dropout: expectation preserved
+    assert abs(float(out.mean()) - 1.0) < 0.1
+    dout = jax.random.normal(KEY, x.shape)
+    _check(L.dropout.backward(dout, mask), dout * mask)
+
+
+def test_simple_rnn_backward():
+    x = jax.random.normal(KEY, (2, 5, 4))
+    wx, wh, b = L.simple_rnn.init(4, 3, KEY)
+    h0 = jnp.zeros((2, 3))
+    hs, _ = L.simple_rnn.forward(x, wx, wh, b, h0)
+    dhs = jax.random.normal(KEY, hs.shape)
+    got = L.simple_rnn.backward(dhs, x, wx, wh, b, h0)
+    want = jax.grad(lambda *a: jnp.sum(L.simple_rnn.forward(*a)[0] * dhs),
+                    argnums=(0, 1, 2, 3, 4))(x, wx, wh, b, h0)
+    _check(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_lstm_backward():
+    x = jax.random.normal(KEY, (2, 5, 4))
+    wx, wh, b = L.lstm.init(4, 3, KEY)
+    h0 = jnp.zeros((2, 3)); c0 = jnp.zeros((2, 3))
+    hs, _, cache = L.lstm.forward(x, wx, wh, b, h0, c0)
+    dhs = jax.random.normal(KEY, hs.shape)
+    got = L.lstm.backward(dhs, cache, x, wx, wh, b, h0, c0)
+    want = jax.grad(lambda *a: jnp.sum(L.lstm.forward(*a)[0] * dhs),
+                    argnums=(0, 1, 2, 3, 4, 5))(x, wx, wh, b, h0, c0)
+    _check(got, want, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("loss_name,probs", [
+    ("cross_entropy_loss", True), ("softmax_cross_entropy", False),
+    ("l2_loss", False), ("log_loss", True),
+])
+def test_loss_backward(loss_name, probs):
+    cls = getattr(LOSS, loss_name)
+    raw = jax.random.normal(KEY, (6, 4))
+    pred = jax.nn.softmax(raw) if probs else raw
+    y = jax.nn.one_hot(jnp.array([0, 1, 2, 3, 1, 0]), 4)
+    got = cls.backward(pred, y)
+    want = jax.grad(lambda p: cls.forward(p, y))(pred)
+    _check(got, want, rtol=1e-3, atol=1e-5)
+
+
+def test_reg_backward():
+    w = jax.random.normal(KEY, (5, 5))
+    _check(LOSS.l2_reg.backward(w, 0.1),
+           jax.grad(lambda w: LOSS.l2_reg.forward(w, 0.1))(w))
+    _check(LOSS.l1_reg.backward(w, 0.1),
+           jax.grad(lambda w: LOSS.l1_reg.forward(w, 0.1))(w))
+
+
+def test_library_has_20_plus_layers():
+    layer_names = [n for n in dir(L) if not n.startswith("_")
+                   and hasattr(getattr(L, n), "forward")]
+    assert len(layer_names) >= 20, layer_names

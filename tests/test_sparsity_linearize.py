@@ -1,0 +1,85 @@
+"""Sparsity machinery (paper §3 "Sparse Operations") + tensor linearization
+(paper §3 "Tensor Representation")."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import sparsity as S
+from repro.core.linearize import delinearize, linearize
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _random_sparse(shape, density, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    mask = rng.random(shape) < density
+    return jnp.asarray(x * mask)
+
+
+def test_format_selection_threshold():
+    dense = S.MatrixCharacteristics(100, 100, 9000)   # density .9
+    sparse = S.MatrixCharacteristics(100, 100, 1000)  # density .1
+    tiny = S.MatrixCharacteristics(4, 4, 1)
+    assert S.select_format(dense) == "dense"
+    assert S.select_format(sparse) == "sparse"
+    assert S.select_format(tiny) == "dense"  # too small to matter
+
+
+def test_conv_operator_variants():
+    """The paper's four physical convolution operators."""
+    d = S.MatrixCharacteristics(100, 100, 10000)
+    s = S.MatrixCharacteristics(100, 100, 100)
+    assert S.select_conv_operator(d, d) == "conv2d_dense_dense"
+    assert S.select_conv_operator(s, d) == "conv2d_sparse_dense"
+    assert S.select_conv_operator(d, s) == "conv2d_dense_sparse"
+    assert S.select_conv_operator(s, s) == "conv2d_sparse_sparse"
+
+
+def test_spmm_matches_dense():
+    a = _random_sparse((64, 80), 0.1)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal((80, 32)),
+                    jnp.float32)
+    got = S.spmm(S.to_csr(a), b)
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_csr_roundtrip():
+    a = _random_sparse((33, 47), 0.2)
+    np.testing.assert_array_equal(S.csr_to_dense(S.to_csr(a)), a)
+
+
+@given(density=st.floats(0.01, 0.99), m=st.integers(8, 64),
+       k=st.integers(8, 64), n=st.integers(4, 32))
+@settings(max_examples=25, deadline=None)
+def test_matmul_auto_correct_any_density(density, m, k, n):
+    """Operator selection never changes the result (SystemML's contract:
+    physical operators are semantics-preserving)."""
+    a = _random_sparse((m, k), density, seed=m * k)
+    b = jnp.asarray(np.random.default_rng(7).standard_normal((k, n)),
+                    jnp.float32)
+    got, op = S.matmul_auto(a, b)
+    np.testing.assert_allclose(got, a @ b, rtol=2e-3, atol=2e-3)
+    assert op.startswith("matmul_")
+
+
+def test_sparse_flops_reduction():
+    """The paper's claim: sparse-safe operations reduce FLOPs."""
+    a_sparse = S.MatrixCharacteristics(1000, 1000, 10000)  # 1% dense
+    b = S.MatrixCharacteristics(1000, 512, -1)
+    dense_flops = 2 * 1000 * 1000 * 512
+    assert S.sparse_flops_matmul(a_sparse, b) < dense_flops / 10
+
+
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=4),
+       st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_linearize_roundtrip(trailing, n):
+    shape = (n, *trailing)
+    x = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    x2d, tr = linearize(x)
+    assert x2d.ndim == 2 and x2d.shape[0] == n
+    np.testing.assert_array_equal(delinearize(x2d, tr), x)
