@@ -1,0 +1,94 @@
+"""Plan-cache benchmark: steady-state per-request serving latency with the
+plan cache on vs. off over a mixed-shape request stream.
+
+The cache-off path is the seed behaviour (one planner walk + one fresh XLA
+trace per request); the cache-on path amortizes both across the stream via
+shape-bucketed LRU plan caching (``repro.core.plan_cache``). Acceptance
+target: >= 5x lower steady-state per-request latency with the cache on.
+
+    PYTHONPATH=src python benchmarks/bench_plan_cache.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and exits
+non-zero if the cached path errors, so CI smoke runs catch rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+
+
+def _stream(smoke: bool):
+    # mixed (batch, context) shapes: several buckets, revisited repeatedly
+    if smoke:
+        return [(1, 40), (2, 100), (1, 40), (2, 100), (1, 200), (2, 100)], 2
+    return [(1, 40), (2, 100), (4, 60), (1, 200), (2, 100), (1, 40),
+            (4, 60), (2, 250), (1, 200), (2, 100)], 3
+
+
+def _measure(smoke: bool, arch: str):
+    """Returns (rows, speedup): the CSV rows plus the numeric on/off ratio
+    so the CI gate doesn't re-parse its own formatting."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+    cfg = get_config(arch)
+    shapes, repeats = _stream(smoke)
+    new_tokens = 2 if smoke else 4
+    rows = []
+
+    # --- cache ON: warm pass settles compiles/recompiles, then measure ---
+    srv = PlanServer(cfg, dtype=jnp.float32, enable_cache=True, capacity=16)
+    for b, c in sorted(set(shapes)):  # warm each bucket (compile + trace)
+        srv.handle(ServeRequest(b, c, new_tokens))
+        srv.handle(ServeRequest(b, c, new_tokens))  # settle recompilation
+    on_lat = [srv.handle(ServeRequest(b, c, new_tokens))["latency_s"]
+              for _ in range(repeats) for b, c in shapes]
+    on_us = statistics.mean(on_lat) * 1e6
+    m = srv.metrics
+    rows.append(
+        f"plan_cache_on,{on_us:.0f},"
+        f"hits={m.hits};misses={m.misses};evictions={m.evictions};"
+        f"recompiles={m.recompiles};hit_rate={m.hit_rate:.2f}")
+
+    # --- cache OFF: every request pays planner walk + fresh trace ---------
+    off_repeats = 1 if smoke else 2
+    srv_off = PlanServer(cfg, dtype=jnp.float32, enable_cache=False)
+    off_lat = [srv_off.handle(ServeRequest(b, c, new_tokens))["latency_s"]
+               for _ in range(off_repeats) for b, c in shapes]
+    off_us = statistics.mean(off_lat) * 1e6
+    rows.append(f"plan_cache_off,{off_us:.0f},compiles={srv_off.metrics.compiles}")
+
+    speedup = off_us / on_us if on_us else 0.0
+    rows.append(f"plan_cache_speedup,{on_us:.0f},x={speedup:.1f};target=5.0")
+    return rows, speedup
+
+
+def run(smoke: bool = False, arch: str = "yi-6b-smoke"):
+    """Harness entry point (benchmarks/run.py contract): CSV rows only."""
+    return _measure(smoke, arch)[0]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (seconds, not minutes)")
+    ap.add_argument("--arch", default="yi-6b-smoke")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    rows, speedup = _measure(args.smoke, args.arch)
+    for row in rows:
+        print(row, flush=True)
+    if speedup < 5.0:
+        print(f"FAIL: plan-cache speedup {speedup:.1f}x < 5x target",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

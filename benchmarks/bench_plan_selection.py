@@ -4,6 +4,7 @@ plan chosen per (arch x shape) and the compiler's own latency."""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.config import INPUT_SHAPES, SINGLE_POD_MESH
@@ -11,9 +12,10 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core.planner import compile_plan
 
 
-def run():
+def run(smoke: bool = False):
+    archs = ARCH_IDS[:2] if smoke else ARCH_IDS
     rows = []
-    for arch in ARCH_IDS:
+    for arch in archs:
         cfg = get_config(arch)
         for shape in INPUT_SHAPES.values():
             t0 = time.perf_counter()
@@ -28,3 +30,20 @@ def run():
                 f"fits={plan.memory.fits()}"
             )
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="first two archs only (CI bench-smoke job)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke):
+        print(row, flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

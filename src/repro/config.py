@@ -274,7 +274,9 @@ def reduced_config(cfg: ModelConfig) -> ModelConfig:
         serve_window=64,
     )
     if cfg.num_experts:
-        kw.update(num_experts=4, experts_per_token=2)
+        # dropless capacity (cap >= tokens/group): smoke correctness tests
+        # must not depend on which tokens a full forward capacity-drops
+        kw.update(num_experts=4, experts_per_token=2, moe_capacity_factor=2.0)
     if cfg.family == "ssm":
         kw.update(ssm_state=16, ssm_head_dim=16)
     if cfg.family == "hybrid":

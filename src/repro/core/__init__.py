@@ -2,15 +2,20 @@
 generation of distributed execution plans (see DESIGN.md §1 C1)."""
 
 from repro.core.planner import PlanCompiler, compile_plan
-from repro.core.strategies import ExecutionPlan, PlanConfig, Strategy
+from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats, Strategy
 from repro.core.memory import MemoryEstimate, estimate_memory
 from repro.core.cost import CostEstimate, analytic_cost, roofline_terms
 from repro.core.sharding import spec_for, tree_specs
 from repro.core.parfor import parfor, choose_parfor_plan, count_collectives
+from repro.core.plan_cache import (BucketPolicy, CacheEntry, PlanCache,
+                                   PlanCacheMetrics, PlanKey, bucket_pow2,
+                                   recompile_reasons)
 
 __all__ = [
     "PlanCompiler", "compile_plan", "ExecutionPlan", "PlanConfig", "Strategy",
-    "MemoryEstimate", "estimate_memory", "CostEstimate", "analytic_cost",
-    "roofline_terms", "spec_for", "tree_specs", "parfor", "choose_parfor_plan",
-    "count_collectives",
+    "RuntimeStats", "MemoryEstimate", "estimate_memory", "CostEstimate",
+    "analytic_cost", "roofline_terms", "spec_for", "tree_specs", "parfor",
+    "choose_parfor_plan", "count_collectives", "BucketPolicy", "CacheEntry",
+    "PlanCache", "PlanCacheMetrics", "PlanKey", "bucket_pow2",
+    "recompile_reasons",
 ]

@@ -46,6 +46,15 @@ class MemoryEstimate:
     def fits(self, headroom: float = 0.9) -> bool:
         return self.total <= self.budget * headroom
 
+    def scaled(self, factor: float) -> "MemoryEstimate":
+        """Runtime-corrected copy: every tensor-class estimate multiplied by
+        the observed/estimated correction factor. Dynamic recompilation
+        replaces compile-time worst-case statistics with these."""
+        return MemoryEstimate(
+            per_device={k: v * factor for k, v in self.per_device.items()},
+            budget=self.budget,
+        )
+
     def summary(self) -> str:
         gib = 1024**3
         parts = "  ".join(f"{k}={v / gib:.2f}GiB" for k, v in self.per_device.items())

@@ -25,7 +25,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 
 # Below this many rows per device, distributing is not worth it (SystemML's
 # local-parfor decision for small task sets).
@@ -92,7 +92,7 @@ def parfor(
         mesh=mesh,
         in_specs=(in_spec,),
         out_specs=out_spec,
-        check_vma=False,
+        check_rep=False,
     )
     return fn(rows), plan
 

@@ -29,7 +29,7 @@ from repro.config import (
 )
 from repro.core.cost import analytic_cost
 from repro.core.memory import estimate_memory
-from repro.core.strategies import ExecutionPlan, PlanConfig, Strategy
+from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats, Strategy
 
 LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
 
@@ -46,7 +46,16 @@ class PlanCompiler:
         shape: InputShape,
         mesh: MeshConfig,
         train: TrainConfig = TrainConfig(),
+        mem_scale: float = 1.0,
     ) -> ExecutionPlan:
+        """Walk the plan lattice and return the first fitting plan.
+
+        ``mem_scale`` is the dynamic-recompilation hook: when a plan's
+        observed memory watermark exceeded its compile-time estimate, the
+        recompile pass re-enters here with the observed/estimated correction
+        factor, so every candidate is judged (and the chosen plan is
+        annotated) with runtime-corrected statistics.
+        """
         chosen = None
         candidates = list(self._candidates(model, shape, mesh, train))
         if train.force_strategy:
@@ -55,6 +64,8 @@ class PlanCompiler:
             ] or candidates
         for cand in candidates:
             mem = estimate_memory(model, shape, mesh, cand, train, self.hw)
+            if mem_scale != 1.0:
+                mem = mem.scaled(mem_scale)
             if mem.fits(self.headroom):
                 chosen, chosen_mem = cand, mem
                 break
@@ -66,11 +77,60 @@ class PlanCompiler:
                 + ("WARNING: worst-case estimate exceeds HBM budget",)
             )
             chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw)
+            if mem_scale != 1.0:
+                chosen_mem = chosen_mem.scaled(mem_scale)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw)
         return ExecutionPlan(
             model=model, shape=shape, mesh=mesh, config=chosen,
             memory=chosen_mem, cost=cost,
         )
+
+    # ------------------------------------------------------------------
+    def recompile(
+        self,
+        prior: ExecutionPlan,
+        stats: RuntimeStats,
+        train: TrainConfig = TrainConfig(),
+    ) -> ExecutionPlan:
+        """Dynamic recompilation (SystemML §2): re-enter the compiler with
+        *observed* runtime characteristics replacing the compile-time
+        worst-case assumptions of ``prior``.
+
+        Two divergences are corrected: (1) the actual request shape grew
+        beyond the compiled shape — the plan is recompiled for the larger
+        shape; (2) the measured memory watermark exceeded the compile-time
+        estimate — every candidate estimate is inflated by the observed
+        correction factor so the lattice walk escalates honestly.
+        """
+        shape = prior.shape
+        if (stats.shape.seq_len > shape.seq_len
+                or stats.shape.global_batch > shape.global_batch):
+            shape = InputShape(
+                name=f"{shape.kind}_recompiled",
+                seq_len=max(shape.seq_len, stats.shape.seq_len),
+                global_batch=max(shape.global_batch, stats.shape.global_batch),
+                kind=shape.kind,
+            )
+        scale = 1.0
+        if (stats.watermark_bytes
+                and prior.memory is not None and prior.memory.total > 0):
+            scale = max(1.0, stats.watermark_bytes / prior.memory.total)
+        plan = self.compile(prior.model, shape, prior.mesh, train,
+                            mem_scale=scale)
+        # Corrected statistics must cover the observation even when the
+        # lattice walk escalated to a candidate with a smaller base
+        # estimate — otherwise the same watermark breaches again on the
+        # next request and recompilation never converges. Worst-case
+        # estimates never under-estimate (core.memory contract).
+        if (stats.watermark_bytes and plan.memory is not None
+                and 0 < plan.memory.total < stats.watermark_bytes):
+            plan.memory = plan.memory.scaled(
+                stats.watermark_bytes / plan.memory.total)
+        plan.config = plan.config.replace(
+            notes=plan.config.notes
+            + (f"dynamic recompilation: runtime stats correction x{scale:.2f}",)
+        )
+        return plan
 
     # ------------------------------------------------------------------
     def _attention_variant(self, model: ModelConfig, shape: InputShape) -> str:

@@ -66,6 +66,21 @@ class PlanConfig:
         return dataclasses.replace(self, **kw)
 
 
+@dataclass(frozen=True)
+class RuntimeStats:
+    """Observed data/runtime characteristics of one executed request.
+
+    SystemML distinguishes *compile-time statistics* (worst-case size and
+    sparsity assumptions baked into the plan) from *runtime statistics*
+    observed while executing it, and re-optimizes when they diverge. This
+    is the runtime side: the actual request shape and the measured live-
+    bytes watermark, fed back into :meth:`PlanCompiler.recompile`.
+    """
+
+    shape: InputShape
+    watermark_bytes: float = 0.0
+
+
 @dataclass
 class ExecutionPlan:
     """Compiler output: layout config + estimates + EXPLAIN text."""

@@ -1,13 +1,27 @@
 """Serving launcher: batched greedy decoding with a planner-chosen cache
 layout.
 
+Single-shot mode (the original path):
+
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b-smoke \
         --batch 4 --context 128 --tokens 32
+
+Mixed-shape request-stream mode — exercises the plan cache + dynamic
+recompilation end-to-end (``repro.core.plan_cache``): requests of varying
+(batch, context) round up to power-of-two buckets, steady-state requests
+hit cached compiled plans, and estimate breaches trigger recompilation:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b-smoke \
+        --stream --requests 24 --tokens 4
+    # explicit shape mix, cache disabled for A/B:
+    PYTHONPATH=src python -m repro.launch.serve --stream \
+        --shapes 2x100,1x40,4x60 --no-cache
 """
 
 from __future__ import annotations
 
 import argparse
+import random
 import time
 
 import jax
@@ -17,18 +31,47 @@ from repro.config import InputShape, MeshConfig
 from repro.configs import ARCH_IDS, get_config
 from repro.core.planner import compile_plan
 from repro.models.model import build_model
-from repro.runtime.serve_loop import greedy_decode, make_decode_step
+from repro.runtime.serve_loop import (PlanServer, ServeRequest, greedy_decode,
+                                      make_decode_step)
+
+DEFAULT_SHAPE_MIX = ((1, 40), (2, 100), (4, 60), (1, 200), (2, 250))
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mamba2-1.3b-smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--context", type=int, default=128)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--dtype", default="float32")
-    args = ap.parse_args()
+def _parse_shapes(spec: str):
+    """``"2x100,1x40"`` -> ((2, 100), (1, 40))."""
+    out = []
+    for part in spec.split(","):
+        try:
+            b, c = part.lower().split("x")
+            out.append((int(b), int(c)))
+        except ValueError:
+            raise SystemExit(
+                f"--shapes: bad entry {part!r} (expected BATCHxCONTEXT, "
+                f'e.g. "2x100,1x40")')
+    return tuple(out)
 
+
+def serve_stream(args) -> None:
+    cfg = get_config(args.arch)
+    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+    srv = PlanServer(cfg, dtype=dtype, enable_cache=not args.no_cache,
+                     capacity=args.cache_capacity)
+    mix = _parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPE_MIX
+    rng = random.Random(args.seed)
+    print(f"# stream: {args.requests} requests over shape mix {mix} "
+          f"cache={'off' if args.no_cache else 'on'}")
+    for i in range(args.requests):
+        b, c = mix[rng.randrange(len(mix))]
+        out = srv.handle(ServeRequest(b, c, args.tokens))
+        flag = " RECOMPILED" if out["recompiled"] else ""
+        print(f"req[{i:03d}] batch={b} ctx={c} -> bucket={out['bucket']} "
+              f"{out['latency_s'] * 1e3:8.1f}ms{flag}")
+        for r in out["recompile_reasons"]:
+            print(f"         reason: {r}")
+    print(srv.summary())
+
+
+def serve_once(args) -> None:
     cfg = get_config(args.arch)
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
     model = build_model(cfg, dtype=dtype)
@@ -54,6 +97,33 @@ def main():
     print(f"decoded {args.tokens} tokens x {args.batch} seqs "
           f"in {dt:.2f}s = {args.tokens * args.batch / dt:.1f} tok/s")
     print("sample:", toks[0, :16].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--context", type=int, default=128)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--dtype", default="float32")
+    # mixed-shape request-stream mode (plan cache + dynamic recompilation)
+    ap.add_argument("--stream", action="store_true",
+                    help="serve a mixed-shape request stream via PlanServer")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="stream mode: number of requests")
+    ap.add_argument("--shapes", default="",
+                    help='stream mode: request mix as "BxC,BxC,..." '
+                         "(default: built-in 5-shape mix)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="stream mode: disable the plan cache (A/B baseline)")
+    ap.add_argument("--cache-capacity", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.stream:
+        serve_stream(args)
+    else:
+        serve_once(args)
 
 
 if __name__ == "__main__":

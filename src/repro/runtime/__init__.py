@@ -1,11 +1,14 @@
 from repro.runtime.train_loop import (init_opt_state, make_train_step,
                                       opt_state_specs, train_shardings,
                                       batch_specs)
-from repro.runtime.serve_loop import (cache_shardings, greedy_decode,
+from repro.runtime.serve_loop import (PlanServer, ServeRequest,
+                                      cache_shardings, greedy_decode,
                                       make_decode_step, make_prefill)
-from repro.runtime.metrics import StepTimer, format_metrics
+from repro.runtime.metrics import (LatencyStats, PlanCacheMetrics, StepTimer,
+                                   format_metrics, serve_summary)
 
 __all__ = ["make_train_step", "init_opt_state", "opt_state_specs",
            "train_shardings", "batch_specs", "make_decode_step",
-           "make_prefill", "cache_shardings", "greedy_decode", "StepTimer",
-           "format_metrics"]
+           "make_prefill", "cache_shardings", "greedy_decode", "PlanServer",
+           "ServeRequest", "StepTimer", "format_metrics", "LatencyStats",
+           "PlanCacheMetrics", "serve_summary"]

@@ -1,4 +1,9 @@
-"""Step metrics / throughput accounting."""
+"""Step metrics / throughput accounting + serving-path counters.
+
+The plan-cache counters (:class:`PlanCacheMetrics`) live next to the cache
+in ``repro.core.plan_cache``; they are re-exported here so the runtime layer
+has one metrics surface, and :func:`serve_summary` renders them together
+with per-request latency."""
 
 from __future__ import annotations
 
@@ -8,6 +13,7 @@ from typing import Dict, List, Optional
 
 from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig, TPU_V5E
 from repro.core.cost import model_flops_per_step
+from repro.core.plan_cache import PlanCacheMetrics  # noqa: F401  (re-export)
 
 
 @dataclass
@@ -41,6 +47,44 @@ class StepTimer:
         keys = self.history[-1].keys()
         return {k: sum(h.get(k, 0.0) for h in self.history) / n
                 for k in keys if k != "step"}
+
+
+@dataclass
+class LatencyStats:
+    """Per-request latency accumulator for the serving stream."""
+
+    samples: List[float] = field(default_factory=list)
+
+    def record(self, seconds: float) -> None:
+        self.samples.append(float(seconds))
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        xs = sorted(self.samples)
+        idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+        return xs[idx]
+
+    def summary(self) -> str:
+        ms = 1e3
+        return (f"requests={self.count} mean={self.mean() * ms:.2f}ms "
+                f"p50={self.percentile(50) * ms:.2f}ms "
+                f"p95={self.percentile(95) * ms:.2f}ms")
+
+
+def serve_summary(cache: PlanCacheMetrics, latency: LatencyStats) -> str:
+    """One-line serving report: plan-cache counters + request latency."""
+    return (f"plan_cache: hits={cache.hits} misses={cache.misses} "
+            f"evictions={cache.evictions} compiles={cache.compiles} "
+            f"recompiles={cache.recompiles} hit_rate={cache.hit_rate:.2f} "
+            f"compile_s={cache.compile_seconds:.2f}  |  {latency.summary()}")
 
 
 def format_metrics(rec: Dict) -> str:

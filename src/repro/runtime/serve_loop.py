@@ -3,20 +3,33 @@
 The decode step is the paper's "low-latency scoring" end of the
 "ranging from low-latency scoring to large-scale training" claim; batched
 request scoring uses the parfor engine (``test_algo="allreduce"``).
+
+:class:`PlanServer` is the dynamic-recompilation serving session: incoming
+(batch, context) requests are rounded up to power-of-two shape buckets, the
+plan + jitted decode step for each bucket lives in a :class:`PlanCache`,
+and observed runtime statistics (live-bytes watermark, actual shape) feed
+back into the compiler when they breach the plan's compile-time estimates.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.config import MeshConfig
+from repro.config import InputShape, MeshConfig, ModelConfig, TPU_V5E, HardwareSpec
+from repro.core.plan_cache import (BucketPolicy, CacheEntry, PlanCache,
+                                   PlanKey)
+from repro.core.planner import PlanCompiler
 from repro.core.sharding import spec_for, tree_specs
-from repro.core.strategies import PlanConfig
+from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats
 from repro.models.common import ShardCtx
+from repro.runtime.metrics import LatencyStats, serve_summary
 
 
 def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig):
@@ -60,3 +73,160 @@ def greedy_decode(model, params, cache, first_token, start_pos, num_tokens,
         out.append(toks)
         pos += 1
     return jnp.concatenate(out, axis=1), cache
+
+
+# ===========================================================================
+# PlanServer: shape-bucketed serving with plan cache + dynamic recompilation
+# ===========================================================================
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    """One decode request: ``batch`` sequences with ``context`` cache slots,
+    generating ``new_tokens`` tokens greedily."""
+
+    batch: int
+    context: int
+    new_tokens: int = 8
+
+
+def _tree_bytes(tree) -> float:
+    return float(sum(x.nbytes for x in jax.tree.leaves(tree)
+                     if hasattr(x, "nbytes")))
+
+
+class PlanServer:
+    """Serving session that amortizes plan compilation across requests.
+
+    Request flow (mirrors SystemML's recompilation loop):
+
+    1. the request shape rounds up to its power-of-two bucket
+       (:class:`BucketPolicy`) and forms a :class:`PlanKey`;
+    2. cache hit → reuse the bucket's compiled plan and jitted decode step;
+       miss → one planner walk + one ``jax.jit`` trace, installed in the
+       LRU cache;
+    3. after execution, observed :class:`RuntimeStats` (live-bytes
+       watermark, actual shape) are checked against the plan's compile-time
+       estimates; a breach beyond ``recompile_margin`` re-enters the
+       compiler with runtime-corrected statistics and installs the new
+       plan — at most once per divergence, since the corrected estimate
+       covers the observation.
+
+    With ``enable_cache=False`` every request pays the full compile+trace
+    path (the pre-cache behaviour, kept for A/B benchmarking).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh_cfg: Optional[MeshConfig] = None,
+        dtype=jnp.float32,
+        *,
+        hw: HardwareSpec = TPU_V5E,
+        enable_cache: bool = True,
+        capacity: int = 16,
+        recompile_margin: float = 0.25,
+        policy: BucketPolicy = BucketPolicy(),
+        seed: int = 0,
+    ):
+        from repro.models.model import build_model
+
+        self.cfg = cfg
+        self.mesh_cfg = mesh_cfg or MeshConfig(
+            shape=(len(jax.devices()),), axis_names=("data",))
+        self.dtype = dtype
+        self.dtype_name = np.dtype(dtype).name
+        self.model = build_model(cfg, dtype=dtype)
+        self.params = self.model.init_params(jax.random.PRNGKey(seed))
+        self._params_bytes = _tree_bytes(self.params)
+        self.compiler = PlanCompiler(hw)
+        self.cache = PlanCache(capacity=capacity)
+        self.metrics = self.cache.metrics
+        self.latency = LatencyStats()
+        self.enable_cache = enable_cache
+        self.recompile_margin = recompile_margin
+        self.policy = policy
+
+    # ------------------------------------------------------------------
+    def _build_step(self, plan: ExecutionPlan):
+        return jax.jit(make_decode_step(self.model, plan.config, self.mesh_cfg))
+
+    def _compile_entry(self, key: PlanKey) -> CacheEntry:
+        t0 = time.perf_counter()
+        plan = self.compiler.compile(self.cfg, key.bucket_shape(),
+                                     self.mesh_cfg)
+        entry = CacheEntry(key=key, plan=plan, step_fn=self._build_step(plan))
+        self.metrics.compile_seconds += time.perf_counter() - t0
+        return entry
+
+    # ------------------------------------------------------------------
+    def handle(self, req: ServeRequest) -> Dict[str, Any]:
+        """Serve one request; returns tokens + per-request accounting."""
+        t0 = time.perf_counter()
+        shape = InputShape(f"req_{req.batch}x{req.context}",
+                           req.context, req.batch, "decode")
+        key = PlanKey.for_request(self.cfg, self.mesh_cfg, self.dtype_name,
+                                  shape, self.policy)
+        if self.enable_cache:
+            entry = self.cache.get_or_compile(
+                key, lambda: self._compile_entry(key))
+        else:
+            # pre-cache behaviour: full planner walk + fresh XLA trace
+            self.metrics.misses += 1
+            self.metrics.compiles += 1
+            entry = self._compile_entry(key)
+
+        # execute at the bucket shape (requests pad up to the bucket)
+        b, s = key.batch_bucket, key.seq_bucket
+        kv = self.model.init_cache(b, s)
+        first = jnp.ones((b, 1), jnp.int32)
+        toks, kv = greedy_decode(self.model, self.params, kv, first, 0,
+                                 req.new_tokens, decode_step=entry.step_fn)
+        jax.block_until_ready(toks)
+
+        # runtime statistics: measured live bytes per chip this request.
+        # Each tensor class only divides across the chips the plan actually
+        # shards it over; replicated layouts hold a full copy per chip.
+        cfgp = entry.plan.config
+        mesh = self.mesh_cfg
+        param_div = 1
+        if cfgp.tensor_parallel or cfgp.expert_parallel:
+            param_div *= mesh.model_parallelism
+        if cfgp.params_over_data:
+            param_div *= mesh.data_parallelism
+        kv_div = 1
+        for ax, sz in zip(mesh.axis_names, mesh.shape):
+            if ax in cfgp.cache_batch_axes or ax in cfgp.cache_seq_axes:
+                kv_div *= sz
+        if cfgp.cache_heads_over_model:
+            kv_div *= mesh.model_parallelism
+        watermark = (self._params_bytes / param_div
+                     + (_tree_bytes(kv) + toks.nbytes) / kv_div)
+        stats = RuntimeStats(shape=shape, watermark_bytes=watermark)
+        reasons: Tuple[str, ...] = ()
+        if self.enable_cache:
+            t_r = time.perf_counter()
+            refreshed, reasons = self.cache.refresh(
+                key, stats, self.compiler, margin=self.recompile_margin,
+                build_step=self._build_step, policy=self.policy)
+            if reasons:
+                self.metrics.compile_seconds += time.perf_counter() - t_r
+            if refreshed is not None:
+                entry = refreshed
+        # latency includes any in-request recompilation — that cost is the
+        # mechanism under measurement, not overhead to hide
+        latency = time.perf_counter() - t0
+        self.latency.record(latency)
+        return {
+            "tokens": toks[: req.batch],
+            "latency_s": latency,
+            "bucket": (b, s),
+            "plan": entry.plan,
+            "recompiled": bool(reasons),
+            "recompile_reasons": reasons,
+            "watermark_bytes": watermark,
+        }
+
+    # ------------------------------------------------------------------
+    def summary(self) -> str:
+        return serve_summary(self.metrics, self.latency)

@@ -1,0 +1,1 @@
+from repro.testing.hypothesis_compat import given, settings, st  # noqa: F401

@@ -1,0 +1,99 @@
+"""Deterministic fallback for ``hypothesis`` in minimal environments.
+
+The property tests in ``tests/`` are written against the real hypothesis
+API. Some CI/sandbox images pin only the runtime deps (jax + pytest), so
+this module provides a tiny drop-in subset: when hypothesis is installed
+it is re-exported unchanged; otherwise ``@given`` runs each test against a
+fixed number of seeded pseudo-random samples. This trades shrinking and
+example databases for zero extra dependencies — the invariants still get
+exercised across a spread of inputs.
+
+Usage (in a test module)::
+
+    try:
+        import hypothesis.strategies as st
+        from hypothesis import given, settings
+    except ImportError:
+        from repro.testing.hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+try:  # real hypothesis wins whenever it is available
+    import hypothesis.strategies as st  # type: ignore  # noqa: F401
+    from hypothesis import given, settings  # type: ignore  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: ``draw(rng)`` returns one example."""
+
+        def __init__(self, draw: Callable[[random.Random], Any]):
+            self._draw = draw
+
+        def draw(self, rng: random.Random) -> Any:
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq: Sequence) -> _Strategy:
+            items: List = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size: int = 0, max_size: int = 8) -> _Strategy:
+            def draw(rng: random.Random):
+                n = rng.randint(min_size, max_size)
+                return [elem.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples: int = 20, **_ignored) -> Callable:
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strats: _Strategy, **kw_strats: _Strategy) -> Callable:
+        def deco(fn):
+            # No functools.wraps: pytest would read the wrapped signature
+            # and treat the strategy parameters as fixtures.
+            def wrapper():
+                # read at call time: @settings may sit above OR below @given
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                rng = random.Random(0)
+                for _ in range(n):
+                    args = tuple(s.draw(rng) for s in arg_strats)
+                    kwargs = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

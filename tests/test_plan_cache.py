@@ -1,0 +1,255 @@
+"""Plan cache + dynamic recompilation (the SystemML §2 mechanism on the
+serving path): bucket rounding, LRU eviction order, hit/miss counters, and
+estimate-breach-triggered recompilation that converges after one pass."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.config import InputShape, SINGLE_DEVICE_MESH, SINGLE_POD_MESH
+from repro.configs import get_config
+from repro.core.plan_cache import (BucketPolicy, CacheEntry, PlanCache,
+                                   PlanKey, bucket_pow2, recompile_reasons)
+from repro.core.planner import PlanCompiler, compile_plan
+from repro.core.strategies import RuntimeStats
+
+CFG = get_config("yi-6b-smoke")
+
+
+def _key(batch=2, seq=128, kind="decode"):
+    shape = InputShape("t", seq, batch, kind)
+    return PlanKey.for_request(CFG, SINGLE_DEVICE_MESH, "float32", shape)
+
+
+def _entry(key):
+    plan = compile_plan(CFG, key.bucket_shape(), SINGLE_DEVICE_MESH)
+    return CacheEntry(key=key, plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# bucket rounding
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_pow2_rounds_up():
+    assert bucket_pow2(1) == 1
+    assert bucket_pow2(2) == 2
+    assert bucket_pow2(3) == 4
+    assert bucket_pow2(4) == 4
+    assert bucket_pow2(5) == 8
+    assert bucket_pow2(1000) == 1024
+
+
+def test_bucket_pow2_minimum():
+    assert bucket_pow2(1, minimum=16) == 16
+    assert bucket_pow2(17, minimum=16) == 32
+    assert bucket_pow2(0) == 1
+
+
+def test_plan_key_buckets_request_shapes():
+    k = PlanKey.for_request(CFG, SINGLE_DEVICE_MESH, "float32",
+                            InputShape("r", 100, 3, "decode"),
+                            BucketPolicy(min_batch=1, min_seq=16))
+    assert (k.batch_bucket, k.seq_bucket) == (4, 128)
+    bs = k.bucket_shape()
+    assert (bs.global_batch, bs.seq_len, bs.kind) == (4, 128, "decode")
+    # one key per shape family: any (3..4, 65..128) request maps identically
+    assert _key(4, 65) == _key(3, 128)
+    # different mesh/dtype/kind never collide
+    assert k != PlanKey.for_request(CFG, SINGLE_POD_MESH, "float32",
+                                    InputShape("r", 100, 3, "decode"))
+    assert k != dataclasses.replace(k, dtype="bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# LRU + counters
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_order():
+    cache = PlanCache(capacity=2)
+    ka, kb, kc = _key(1, 64), _key(2, 128), _key(4, 256)
+    cache.put(ka, _entry(ka))
+    cache.put(kb, _entry(kb))
+    cache.get(ka)                      # A is now most-recently used
+    cache.put(kc, _entry(kc))          # evicts B (least-recently used)
+    assert kb not in cache and ka in cache and kc in cache
+    assert cache.metrics.evictions == 1
+    assert len(cache) == 2
+
+
+def test_hit_miss_counters():
+    cache = PlanCache(capacity=4)
+    k = _key()
+    assert cache.get(k) is None
+    cache.put(k, _entry(k))
+    assert cache.get(k) is not None
+    assert cache.get(k) is not None
+    m = cache.metrics
+    assert (m.hits, m.misses) == (2, 1)
+    assert m.hit_rate == pytest.approx(2 / 3)
+
+
+def test_get_or_compile_compiles_once():
+    cache = PlanCache(capacity=4)
+    k = _key()
+    calls = []
+
+    def compile_fn():
+        calls.append(1)
+        return _entry(k)
+
+    e1 = cache.get_or_compile(k, compile_fn)
+    e2 = cache.get_or_compile(k, compile_fn)
+    assert e1 is e2 and len(calls) == 1
+    assert cache.metrics.compiles == 1
+
+
+# ---------------------------------------------------------------------------
+# dynamic recompilation
+# ---------------------------------------------------------------------------
+
+
+def test_memory_breach_triggers_exactly_one_recompile():
+    cache = PlanCache(capacity=4)
+    compiler = PlanCompiler()
+    k = _key(2, 128)
+    old = cache.put(k, _entry(k))
+    # observed watermark 2x the compile-time estimate: breach at 25% margin
+    stats = RuntimeStats(shape=k.bucket_shape(),
+                         watermark_bytes=2.0 * old.plan.memory.total)
+
+    new, reasons = cache.refresh(k, stats, compiler, margin=0.25)
+    assert reasons and "watermark" in reasons[0]
+    assert cache.metrics.recompiles == 1
+    assert new is not old
+    # the new plan is installed in the cache under the same bucket
+    cache.metrics.hits = 0
+    assert cache.get(k) is new
+    # runtime-corrected statistics now cover the observation ...
+    assert new.plan.memory.total >= stats.watermark_bytes
+    # ... so the identical follow-up request does NOT recompile again
+    again, reasons2 = cache.refresh(k, stats, compiler, margin=0.25)
+    assert reasons2 == () and again is new
+    assert cache.metrics.recompiles == 1
+
+
+def test_no_recompile_within_margin():
+    cache = PlanCache(capacity=4)
+    k = _key(2, 128)
+    e = cache.put(k, _entry(k))
+    stats = RuntimeStats(shape=k.bucket_shape(),
+                         watermark_bytes=1.1 * e.plan.memory.total)
+    same, reasons = cache.refresh(k, stats, PlanCompiler(), margin=0.25)
+    assert same is e and reasons == ()
+    assert cache.metrics.recompiles == 0
+
+
+def test_shape_outgrowing_bucket_recompiles_into_larger_bucket():
+    cache = PlanCache(capacity=4)
+    k = _key(2, 128)
+    cache.put(k, _entry(k))
+    grown = InputShape("grown", 300, 2, "decode")  # context outgrew 128
+    new, reasons = cache.refresh(k, RuntimeStats(shape=grown), PlanCompiler())
+    assert reasons and "exceeds compiled bucket" in reasons[0]
+    assert new.key.seq_bucket == 512
+    assert new.plan.shape.seq_len >= 512  # plan covers the whole new bucket
+    cache.metrics.misses = 0
+    assert cache.get(new.key) is new
+    # the invalidated entry is gone; re-refreshing the old key is a no-op
+    # rather than a repeated recompile
+    assert k not in cache
+    none, reasons2 = cache.refresh(k, RuntimeStats(shape=grown),
+                                   PlanCompiler())
+    assert none is None and reasons2 == ()
+    assert cache.metrics.recompiles == 1
+
+
+def test_rebucket_reuses_existing_target_entry():
+    """Growing into a bucket that already holds a compiled plan reuses that
+    entry (and its traced executable) instead of clobbering it."""
+    cache = PlanCache(capacity=4)
+    small = _key(2, 128)
+    big = _key(2, 512)
+    cache.put(small, _entry(small))
+    target = cache.put(big, _entry(big))
+    target.step_fn = object()  # stands in for the traced executable
+    grown = InputShape("grown", 300, 2, "decode")
+    got, reasons = cache.refresh(small, RuntimeStats(shape=grown),
+                                 PlanCompiler())
+    assert reasons and got is target and got.step_fn is target.step_fn
+    assert small not in cache
+    assert cache.metrics.recompiles == 0  # no planner walk happened
+
+
+def test_recompile_converges_even_when_strategy_escalates():
+    """If the scaled estimate pushes the walk to a more-sharded candidate
+    with a smaller base estimate, the corrected statistics must still cover
+    the observed watermark — else the same request breaches forever."""
+    compiler = PlanCompiler()
+    prior = compiler.compile(get_config("granite-8b"),
+                             InputShape("t", 2048, 32, "decode"),
+                             SINGLE_POD_MESH)
+    watermark = 50.0 * prior.memory.total  # huge breach: forces escalation
+    stats = RuntimeStats(shape=prior.shape, watermark_bytes=watermark)
+    new = compiler.recompile(prior, stats)
+    assert new.memory.total >= watermark
+    assert recompile_reasons(new, stats) == ()
+
+
+def test_recompile_reasons_predicate():
+    plan = compile_plan(CFG, InputShape("t", 128, 2, "decode"),
+                        SINGLE_DEVICE_MESH)
+    ok = RuntimeStats(shape=plan.shape,
+                      watermark_bytes=plan.memory.total)
+    assert recompile_reasons(plan, ok) == ()
+    breach = RuntimeStats(shape=plan.shape,
+                          watermark_bytes=plan.memory.total * 3)
+    assert len(recompile_reasons(plan, breach)) == 1
+
+
+def test_recompile_scales_estimates_monotonically():
+    """PlanCompiler.recompile inflates every candidate estimate by the
+    observed correction factor (runtime stats replace compile-time stats)."""
+    compiler = PlanCompiler()
+    prior = compiler.compile(CFG, InputShape("t", 128, 2, "decode"),
+                             SINGLE_DEVICE_MESH)
+    stats = RuntimeStats(shape=prior.shape,
+                         watermark_bytes=4.0 * prior.memory.total)
+    new = compiler.recompile(prior, stats)
+    assert new.memory.total == pytest.approx(4.0 * prior.memory.total, rel=0.3)
+    assert any("dynamic recompilation" in n for n in new.config.notes)
+
+
+# ---------------------------------------------------------------------------
+# PlanServer end-to-end (tiny model, CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_server_mixed_stream_end_to_end():
+    from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=8)
+    r1 = srv.handle(ServeRequest(2, 100, new_tokens=2))
+    assert r1["tokens"].shape == (2, 2)
+    assert r1["bucket"] == (2, 128)
+    # same bucket: a hit, no new compile
+    compiles_before = srv.metrics.compiles
+    r2 = srv.handle(ServeRequest(1, 90, new_tokens=2))
+    assert r2["bucket"] == (1, 128)   # different batch bucket -> miss
+    r3 = srv.handle(ServeRequest(2, 120, new_tokens=2))
+    assert r3["bucket"] == (2, 128)
+    assert srv.metrics.hits >= 1
+    assert srv.metrics.compiles == compiles_before + 1  # only the (1,128) miss
+    assert srv.summary()  # renders
+
+
+def test_plan_server_cache_off_always_compiles():
+    from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+    srv = PlanServer(CFG, dtype=jnp.float32, enable_cache=False)
+    srv.handle(ServeRequest(1, 40, new_tokens=1))
+    srv.handle(ServeRequest(1, 40, new_tokens=1))
+    assert srv.metrics.compiles == 2
+    assert srv.metrics.hits == 0

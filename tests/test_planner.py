@@ -5,9 +5,13 @@ whose worst-case estimate exceeds the budget if a fitting plan exists;
 escalate monotonically with model size; single-device -> single-node plan.
 """
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal images: seeded deterministic fallback
+    from repro.testing.hypothesis_compat import given, settings, st
 
 from repro.config import (INPUT_SHAPES, SINGLE_DEVICE_MESH, SINGLE_POD_MESH,
                           MULTI_POD_MESH, TPU_V5E, HardwareSpec, TrainConfig)

@@ -1,11 +1,15 @@
 """Sparsity machinery (paper §3 "Sparse Operations") + tensor linearization
 (paper §3 "Tensor Representation")."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal images: seeded deterministic fallback
+    from repro.testing.hypothesis_compat import given, settings, st
 
 from repro.core import sparsity as S
 from repro.core.linearize import delinearize, linearize
