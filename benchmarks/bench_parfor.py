@@ -9,7 +9,6 @@ from __future__ import annotations
 import subprocess
 import sys
 import os
-import time
 
 _BODY = """
 import os
@@ -41,7 +40,7 @@ def run():
         body = _BODY.format(n=n, src=src)
         r = subprocess.run([sys.executable, "-c", body],
                            capture_output=True, text=True, timeout=300)
-        line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")]
+        line = [ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")]
         if not line:
             rows.append(f"parfor_scaling_w{n},0,ERROR={r.stderr[-200:]}")
             continue

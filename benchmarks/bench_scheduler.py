@@ -1,0 +1,127 @@
+"""Continuous-batching benchmark: coalesced scheduler throughput vs.
+sequential per-request ``PlanServer.handle`` on the same mixed-shape stream.
+
+Sequential serving pads every request up to its own power-of-two bucket and
+decodes it alone; the scheduler fills a bucket's batch dimension with
+compatible pending requests, so the same number of decode-step launches
+serves several requests at once. Acceptance target: >= 2x request
+throughput for the coalesced path, and — with dtype-aware memory estimates —
+an fp32 stream must complete with **zero** recompiles (the first estimate
+for every bucket is already fp32-sized).
+
+    PYTHONPATH=src python benchmarks/bench_scheduler.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract) and exits
+non-zero below the throughput gate or on any spurious recompile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+TARGET_SPEEDUP = 2.0
+
+
+def _stream(smoke: bool):
+    """Default mixed-shape stream: single-sequence requests (one user query
+    each) over two context buckets. Sequential serving decodes each at a
+    batch-1 bucket; the scheduler coalesces 8 of them into one group."""
+    mix = [(1, 40), (1, 90), (1, 60), (1, 100), (1, 50), (1, 120),
+           (1, 40), (1, 100), (1, 60), (1, 90), (1, 50), (1, 100),
+           (1, 40), (1, 120), (1, 60), (1, 90)]
+    if smoke:
+        return mix, 8, 4
+    return mix * 2, 8, 6
+
+
+def _measure(smoke: bool, arch: str):
+    """Returns (rows, speedup, recompiles): CSV rows plus the numeric gates
+    so CI doesn't re-parse its own formatting. Both paths serve full
+    prefill+decode requests from warm plan caches; each is timed over
+    several trials and the best trial is compared (noise floor, not luck)."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                         simulate_arrivals)
+    from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+    cfg = get_config(arch)
+    shapes, new_tokens, trials = _stream(smoke)
+    reqs = [ServeRequest(b, c, new_tokens) for b, c in shapes]
+
+    # warm both paths: compile + trace every bucket outside measurement
+    srv_seq = PlanServer(cfg, dtype=jnp.float32, capacity=16, prefill=True)
+    for b, c in sorted(set(shapes)):
+        srv_seq.handle(ServeRequest(b, c, new_tokens))
+    srv = PlanServer(cfg, dtype=jnp.float32, capacity=16)
+    ContinuousBatchingScheduler(srv, max_group_batch=8).run(
+        simulate_arrivals(reqs))
+
+    # interleave trials so transient box load penalizes both paths alike;
+    # compare best-of-trials (the noise floor, not the luck of one run)
+    seq_s, coal_s, sched = None, None, None
+    for _ in range(trials):
+        dt = _time_trial(lambda: [srv_seq.handle(r) for r in reqs])
+        if seq_s is None or dt < seq_s:
+            seq_s = dt
+        trial = ContinuousBatchingScheduler(srv, max_group_batch=8)
+        dt = _time_trial(lambda: trial.run(simulate_arrivals(reqs)))
+        if coal_s is None or dt < coal_s:
+            coal_s, sched = dt, trial
+    seq_rps = len(reqs) / seq_s
+    coal_rps = len(reqs) / coal_s
+
+    speedup = coal_rps / seq_rps if seq_rps else 0.0
+    recompiles = srv.metrics.recompiles + srv_seq.metrics.recompiles
+    m = sched.metrics
+    rows = [
+        f"scheduler_sequential,{seq_s / len(reqs) * 1e6:.0f},"
+        f"rps={seq_rps:.2f};recompiles={srv_seq.metrics.recompiles}",
+        f"scheduler_coalesced,{coal_s / len(reqs) * 1e6:.0f},"
+        f"rps={coal_rps:.2f};groups={m.groups};"
+        f"bucket_fill={m.bucket_fill:.2f};recompiles={srv.metrics.recompiles}",
+        f"scheduler_speedup,{coal_s / len(reqs) * 1e6:.0f},"
+        f"x={speedup:.1f};target={TARGET_SPEEDUP}",
+    ]
+    return rows, speedup, recompiles
+
+
+def _time_trial(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False, arch: str = "yi-6b-smoke"):
+    """Harness entry point (benchmarks/run.py contract): CSV rows only."""
+    return _measure(smoke, arch)[0]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (seconds, not minutes)")
+    ap.add_argument("--arch", default="yi-6b-smoke")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    rows, speedup, recompiles = _measure(args.smoke, args.arch)
+    for row in rows:
+        print(row, flush=True)
+    ok = True
+    if speedup < TARGET_SPEEDUP:
+        print(f"FAIL: coalesced speedup {speedup:.1f}x < "
+              f"{TARGET_SPEEDUP}x target", file=sys.stderr)
+        ok = False
+    if recompiles:
+        print(f"FAIL: fp32 stream burned {recompiles} recompiles "
+              f"(dtype-aware estimates should need zero)", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

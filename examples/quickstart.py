@@ -7,10 +7,9 @@ SGD, and scores with the parfor ``test_algo="allreduce"`` plan.
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import numpy as np
 
 from repro.data import SyntheticClassification
 from repro.frontend import Keras2Plan

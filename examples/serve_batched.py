@@ -5,7 +5,8 @@ attention-free mamba2 family by default (constant-memory state).
     PYTHONPATH=src python examples/serve_batched.py --arch yi-6b-smoke
 """
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -6,7 +6,8 @@ library.
     PYTHONPATH=src python examples/train_lenet.py [--epochs 2]
 """
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

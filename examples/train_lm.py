@@ -9,7 +9,8 @@ path; budget multiple hours on CPU, minutes on a real TPU slice).
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -20,7 +20,6 @@ Two entry points:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
 from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig
 from repro.core.memory import ACT_BYTES, PARAM_BYTES, _cache_dense_bytes

@@ -10,7 +10,7 @@ without re-implementing a full HOP/LOP stack (JAX/XLA owns that level).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import List
 
 from repro.config import InputShape, ModelConfig
 

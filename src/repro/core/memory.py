@@ -19,9 +19,28 @@ from typing import Dict
 from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig, TrainConfig
 from repro.core.strategies import PlanConfig
 
-ACT_BYTES = 2       # bf16 activations
-PARAM_BYTES = 2     # bf16 params
-GRAD_BYTES = 2
+ACT_BYTES = 2       # bf16 default (cost-model roofline terms)
+PARAM_BYTES = 2     # bf16 default
+
+# serving/training dtype -> bytes per element. The estimator threads the
+# *actual* compute dtype through every tensor class instead of assuming
+# bf16: an fp32 server's first estimate must already be fp32-sized, or the
+# first request in every bucket burns a corrective recompile.
+DTYPE_BYTES = {
+    "float64": 8,
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "float8_e4m3fn": 1,
+    "float8_e5m2": 1,
+    "int8": 1,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Bytes per element for a dtype name (worst-case 4 for unknown names:
+    the estimator must never under-estimate)."""
+    return DTYPE_BYTES.get(str(dtype), 4)
 
 # optimizer -> number of per-param state slots (repro.nn.optim)
 OPTIMIZER_SLOTS = {
@@ -88,7 +107,11 @@ def estimate_memory(
     plan: PlanConfig,
     train: TrainConfig,
     hw: HardwareSpec,
+    dtype: str = "bfloat16",
 ) -> MemoryEstimate:
+    """``dtype`` is the actual compute dtype (params + activations + grads +
+    KV cache); compile-time statistics follow it instead of assuming bf16."""
+    nb = dtype_bytes(dtype)
     est = MemoryEstimate(budget=hw.hbm_bytes)
     p = model.param_count()
     # ~1.5% of params (norm scales, biases, router, A/dt vectors) do not shard
@@ -99,22 +122,22 @@ def estimate_memory(
     mp = mesh.model_parallelism if (plan.tensor_parallel or plan.expert_parallel) else 1
     dp_div = mesh.data_parallelism if plan.params_over_data else 1
 
-    params_dev = (shardable / (mp * dp_div) + non_shardable / dp_div) * PARAM_BYTES
+    params_dev = (shardable / (mp * dp_div) + non_shardable / dp_div) * nb
     est.per_device["params"] = params_dev
 
     dp = mesh.data_parallelism if plan.batch_axes else 1
 
     if shape.kind == "train":
-        est.per_device["grads"] = params_dev / PARAM_BYTES * GRAD_BYTES
+        est.per_device["grads"] = params_dev
         est.per_device["opt_state"] = (
-            params_dev / PARAM_BYTES * _opt_bytes_per_param(train.optimizer, plan.opt_state_dtype)
+            params_dev / nb * _opt_bytes_per_param(train.optimizer, plan.opt_state_dtype)
         )
-        est.per_device["activations"] = _train_activation_bytes(model, shape, plan, dp, mp)
+        est.per_device["activations"] = _train_activation_bytes(model, shape, plan, dp, mp, nb)
     elif shape.kind == "prefill":
-        est.per_device["activations"] = _prefill_activation_bytes(model, shape, plan, dp, mp)
+        est.per_device["activations"] = _prefill_activation_bytes(model, shape, plan, dp, mp, nb)
     else:  # decode
-        est.per_device["kv_cache"] = _cache_bytes(model, shape, plan, mesh)
-        est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp)
+        est.per_device["kv_cache"] = _cache_bytes(model, shape, plan, mesh, nb)
+        est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp, nb)
 
     est.per_device["workspace"] = 0.08 * sum(est.per_device.values())
     return est
@@ -156,7 +179,8 @@ def _layer_working_cols(model: ModelConfig, mp: int, variant: str) -> float:
 
 
 def _train_activation_bytes(
-    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int
+    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int,
+    nb: int = ACT_BYTES,
 ) -> float:
     b_dev = max(1, shape.global_batch // dp)
     b_micro = max(1, b_dev // plan.microbatches)
@@ -166,21 +190,22 @@ def _train_activation_bytes(
         # scan carries one residual-stream checkpoint per layer + one layer's
         # recomputation working set + logits chunk
         ckpt_div = mp if plan.seq_shard_checkpoints else 1
-        saved = model.num_layers * tok * model.d_model * ACT_BYTES / ckpt_div
-        working = tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
+        saved = model.num_layers * tok * model.d_model * nb / ckpt_div
+        working = tok * _layer_working_cols(model, mp, plan.attention_variant) * nb
     else:
-        saved = model.num_layers * tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
+        saved = model.num_layers * tok * _layer_working_cols(model, mp, plan.attention_variant) * nb
         working = 0.0
     # loss computed over vocab shard (vocab is model-sharded under TP)
-    logits = tok * (model.vocab_size / mp) * ACT_BYTES
+    logits = tok * (model.vocab_size / mp) * nb
     if model.is_encdec:
         enc_tok = b_micro * model.encoder_seq
-        saved += model.encoder_layers * enc_tok * model.d_model * ACT_BYTES
+        saved += model.encoder_layers * enc_tok * model.d_model * nb
     return saved + working + logits
 
 
 def _prefill_activation_bytes(
-    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int
+    model: ModelConfig, shape: InputShape, plan: PlanConfig, dp: int, mp: int,
+    nb: int = ACT_BYTES,
 ) -> float:
     b_dev = max(1, shape.global_batch // dp)
     # context parallelism: seq dim itself sharded (KV all-gathered per layer)
@@ -188,20 +213,22 @@ def _prefill_activation_bytes(
     tok = b_dev * shape.seq_len // sp
     # forward-only: a few live layer boundaries + one working set + the
     # KV cache being produced
-    live = 3 * tok * model.d_model * ACT_BYTES
-    working = tok * _layer_working_cols(model, mp, plan.attention_variant) * ACT_BYTES
-    kv = _cache_dense_bytes(model, shape.seq_len, b_dev) / (mp if (plan.tensor_parallel or plan.seq_axes) else 1)
+    live = 3 * tok * model.d_model * nb
+    working = tok * _layer_working_cols(model, mp, plan.attention_variant) * nb
+    kv = _cache_dense_bytes(model, shape.seq_len, b_dev, nb) / (
+        mp if (plan.tensor_parallel or plan.seq_axes) else 1)
     if plan.seq_axes:
         # one layer's all-gathered K/V working copy
-        working += b_dev * shape.seq_len * 2 * model.num_kv_heads * model.head_dim * ACT_BYTES
-    logits = b_dev * max(1, model.vocab_size // mp) * ACT_BYTES  # last-token logits
+        working += b_dev * shape.seq_len * 2 * model.num_kv_heads * model.head_dim * nb
+    logits = b_dev * max(1, model.vocab_size // mp) * nb  # last-token logits
     return live + working + kv + logits
 
 
-def _decode_activation_bytes(model: ModelConfig, shape: InputShape, dp: int, mp: int) -> float:
+def _decode_activation_bytes(model: ModelConfig, shape: InputShape, dp: int, mp: int,
+                             nb: int = ACT_BYTES) -> float:
     b_dev = max(1, shape.global_batch // dp)
     per_tok = _layer_working_cols(model, mp, "full") + model.vocab_size / mp
-    return b_dev * per_tok * ACT_BYTES * 4  # x4: double-buffering + fudge
+    return b_dev * per_tok * nb * 4  # x4: double-buffering + fudge
 
 
 # ---------------------------------------------------------------------------
@@ -209,7 +236,8 @@ def _decode_activation_bytes(model: ModelConfig, shape: InputShape, dp: int, mp:
 # ---------------------------------------------------------------------------
 
 
-def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int) -> float:
+def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int,
+                       nb: int = ACT_BYTES) -> float:
     """Un-sharded cache bytes for one full attention stack."""
     pat = model.layer_pattern()
     total = 0.0
@@ -222,21 +250,22 @@ def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int) -> float:
             elif model.serve_window and seq > 262_144:
                 # sliding-window serving variant for long_500k (DESIGN §5)
                 eff_seq = min(seq, model.serve_window)
-            total += batch * eff_seq * kv_width * ACT_BYTES
+            total += batch * eff_seq * kv_width * nb
         elif kind == "s":
             st = model.ssm_num_heads * model.ssm_head_dim * model.ssm_state
             conv = model.ssm_conv_width * (model.d_inner + 2 * model.ssm_state)
-            total += batch * (st + conv) * ACT_BYTES
+            total += batch * (st + conv) * nb
         elif kind == "r":
             w = model.lru_width or model.d_model
-            total += batch * w * 4  # RG-LRU state kept fp32
+            total += batch * w * 4  # RG-LRU state kept fp32 regardless
     if model.is_encdec:
         # cross-attention K/V over encoder outputs
-        total += model.num_layers * batch * model.encoder_seq * kv_width * ACT_BYTES
+        total += model.num_layers * batch * model.encoder_seq * kv_width * nb
     return total
 
 
-def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: MeshConfig) -> float:
+def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: MeshConfig,
+                 nb: int = ACT_BYTES) -> float:
     batch_div = 1
     for ax, sz in zip(mesh.axis_names, mesh.shape):
         if ax in plan.cache_batch_axes:
@@ -249,4 +278,4 @@ def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: 
         if ax in plan.cache_seq_axes:
             div *= sz
     b = max(1, shape.global_batch // batch_div)
-    return _cache_dense_bytes(model, shape.seq_len, b) / div
+    return _cache_dense_bytes(model, shape.seq_len, b, nb) / div

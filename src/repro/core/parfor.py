@@ -24,7 +24,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 # Below this many rows per device, distributing is not worth it (SystemML's

@@ -17,7 +17,7 @@ opt-state-compression / gradient-accumulation.
 
 from __future__ import annotations
 
-from typing import Iterator, List
+from typing import Iterator
 
 from repro.config import (
     TPU_V5E,
@@ -47,6 +47,7 @@ class PlanCompiler:
         mesh: MeshConfig,
         train: TrainConfig = TrainConfig(),
         mem_scale: float = 1.0,
+        dtype: str = "bfloat16",
     ) -> ExecutionPlan:
         """Walk the plan lattice and return the first fitting plan.
 
@@ -54,7 +55,8 @@ class PlanCompiler:
         observed memory watermark exceeded its compile-time estimate, the
         recompile pass re-enters here with the observed/estimated correction
         factor, so every candidate is judged (and the chosen plan is
-        annotated) with runtime-corrected statistics.
+        annotated) with runtime-corrected statistics. ``dtype`` is the actual
+        compute dtype — compile-time statistics are sized for it.
         """
         chosen = None
         candidates = list(self._candidates(model, shape, mesh, train))
@@ -63,7 +65,7 @@ class PlanCompiler:
                 c for c in candidates if c.strategy.value == train.force_strategy
             ] or candidates
         for cand in candidates:
-            mem = estimate_memory(model, shape, mesh, cand, train, self.hw)
+            mem = estimate_memory(model, shape, mesh, cand, train, self.hw, dtype)
             if mem_scale != 1.0:
                 mem = mem.scaled(mem_scale)
             if mem.fits(self.headroom):
@@ -76,13 +78,13 @@ class PlanCompiler:
                 notes=candidates[-1].notes
                 + ("WARNING: worst-case estimate exceeds HBM budget",)
             )
-            chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw)
+            chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw, dtype)
             if mem_scale != 1.0:
                 chosen_mem = chosen_mem.scaled(mem_scale)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw)
         return ExecutionPlan(
             model=model, shape=shape, mesh=mesh, config=chosen,
-            memory=chosen_mem, cost=cost,
+            memory=chosen_mem, cost=cost, dtype=dtype,
         )
 
     # ------------------------------------------------------------------
@@ -116,7 +118,7 @@ class PlanCompiler:
                 and prior.memory is not None and prior.memory.total > 0):
             scale = max(1.0, stats.watermark_bytes / prior.memory.total)
         plan = self.compile(prior.model, shape, prior.mesh, train,
-                            mem_scale=scale)
+                            mem_scale=scale, dtype=prior.dtype)
         # Corrected statistics must cover the observation even when the
         # lattice walk escalated to a candidate with a smaller base
         # estimate — otherwise the same watermark breaches again on the
@@ -289,5 +291,6 @@ def _size(mesh: MeshConfig, axes) -> int:
     return n
 
 
-def compile_plan(model, shape, mesh, train=TrainConfig(), hw=TPU_V5E) -> ExecutionPlan:
-    return PlanCompiler(hw).compile(model, shape, mesh, train)
+def compile_plan(model, shape, mesh, train=TrainConfig(), hw=TPU_V5E,
+                 dtype="bfloat16") -> ExecutionPlan:
+    return PlanCompiler(hw).compile(model, shape, mesh, train, dtype=dtype)

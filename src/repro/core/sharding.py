@@ -78,7 +78,6 @@ def spec_for(
     assignment: list = [None] * len(shape)
     used_mesh_axes: set = set()
 
-    mp = mesh.model_parallelism
 
     def assign(i, mesh_axes):
         if isinstance(mesh_axes, str):

@@ -10,9 +10,9 @@ on the mesh, plus bookkeeping for the chosen operator variants.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import Enum
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.config import InputShape, MeshConfig, ModelConfig
 
@@ -91,13 +91,14 @@ class ExecutionPlan:
     config: PlanConfig
     memory: "object" = None     # core.memory.MemoryEstimate
     cost: "object" = None       # core.cost.CostEstimate
+    dtype: str = "bfloat16"     # compute dtype the statistics were sized for
 
     def explain(self) -> str:
         """SystemML-style EXPLAIN output for the generated plan."""
         c = self.config
         lines = [
             f"# EXECUTION PLAN  {self.model.name} x {self.shape.name} "
-            f"x mesh{self.mesh.shape}",
+            f"x mesh{self.mesh.shape} [{self.dtype}]",
             f"strategy:            {c.strategy.value}",
             f"batch sharded over:  {c.batch_axes or '(replicated)'}",
             f"seq sharded over:    {c.seq_axes or '(unsharded)'}",

@@ -9,13 +9,11 @@ data-parallel host only materializes its slice (the RDD-partition analogue).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import InputShape, ModelConfig

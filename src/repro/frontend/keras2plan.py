@@ -18,7 +18,7 @@ Pandas DataFrames" interface (matrices only — frames are out of scope).
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import numpy as np
 
@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro.core.parfor import parfor
 from repro.core.sparsity import characteristics, select_format
 from repro.nn.module import Sequential
-from repro.nn.optim import get_optimizer
 
 
 def generate_dml(spec: List[dict], meta: Dict, optimizer: str, lr: float,

@@ -65,8 +65,8 @@ def _flash_kernel(
 
     @pl.when(ki == n_kv - 1)
     def _done():
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        lsum = l_ref[...]
+        safe = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 

@@ -6,7 +6,6 @@ against these across shape/dtype sweeps in ``tests/test_kernels_*.py``.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -16,6 +16,13 @@ hit cached compiled plans, and estimate breaches trigger recompilation:
     # explicit shape mix, cache disabled for A/B:
     PYTHONPATH=src python -m repro.launch.serve --stream \
         --shapes 2x100,1x40,4x60 --no-cache
+
+Continuous-batching scheduler mode — pending requests coalesce into shared
+shape buckets (one decode batch serves many requests), prefill plans come
+from the same cache, and arrivals are simulated at ``--arrival-rate``:
+
+    PYTHONPATH=src python -m repro.launch.serve --scheduler \
+        --requests 24 --arrival-rate 20 --slo-ms 2000
 """
 
 from __future__ import annotations
@@ -28,9 +35,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import InputShape, MeshConfig
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.core.planner import compile_plan
 from repro.models.model import build_model
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     simulate_arrivals)
 from repro.runtime.serve_loop import (PlanServer, ServeRequest, greedy_decode,
                                       make_decode_step)
 
@@ -51,24 +60,56 @@ def _parse_shapes(spec: str):
     return tuple(out)
 
 
-def serve_stream(args) -> None:
+def _build_server(args) -> PlanServer:
     cfg = get_config(args.arch)
     dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
-    srv = PlanServer(cfg, dtype=dtype, enable_cache=not args.no_cache,
-                     capacity=args.cache_capacity)
+    # seed + recompile margin plumbed through so streams are reproducible
+    # A/B runs (same model init, same recompilation predicate)
+    return PlanServer(cfg, dtype=dtype, enable_cache=not args.no_cache,
+                      capacity=args.cache_capacity, seed=args.seed,
+                      recompile_margin=args.recompile_margin)
+
+
+def _request_mix(args):
     mix = _parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPE_MIX
     rng = random.Random(args.seed)
+    return mix, [ServeRequest(*mix[rng.randrange(len(mix))], args.tokens)
+                 for _ in range(args.requests)]
+
+
+def serve_stream(args) -> None:
+    srv = _build_server(args)
+    mix, reqs = _request_mix(args)
     print(f"# stream: {args.requests} requests over shape mix {mix} "
           f"cache={'off' if args.no_cache else 'on'}")
-    for i in range(args.requests):
-        b, c = mix[rng.randrange(len(mix))]
-        out = srv.handle(ServeRequest(b, c, args.tokens))
+    for i, req in enumerate(reqs):
+        out = srv.handle(req)
         flag = " RECOMPILED" if out["recompiled"] else ""
-        print(f"req[{i:03d}] batch={b} ctx={c} -> bucket={out['bucket']} "
-              f"{out['latency_s'] * 1e3:8.1f}ms{flag}")
+        print(f"req[{i:03d}] batch={req.batch} ctx={req.context} "
+              f"-> bucket={out['bucket']} {out['latency_s'] * 1e3:8.1f}ms{flag}")
         for r in out["recompile_reasons"]:
             print(f"         reason: {r}")
     print(srv.summary())
+
+
+def serve_scheduled(args) -> None:
+    """Continuous-batching mode: coalesced groups instead of per-request
+    handle() calls, with Poisson arrival simulation."""
+    srv = _build_server(args)
+    mix, reqs = _request_mix(args)
+    sched = ContinuousBatchingScheduler(srv, max_group_batch=args.max_group_batch,
+                                        slo_ms=args.slo_ms)
+    arrivals = simulate_arrivals(reqs, args.arrival_rate, seed=args.seed)
+    print(f"# scheduler: {args.requests} requests over shape mix {mix} "
+          f"arrival_rate={args.arrival_rate}/s "
+          f"max_group_batch={args.max_group_batch}")
+    for rec in sched.run(arrivals):
+        print(f"req[{rec['rid']:03d}] batch={rec['batch']} "
+              f"ctx={rec['context']} -> bucket={rec['bucket']} "
+              f"group={rec['group_size']} "
+              f"queue={rec['queue_s'] * 1e3:7.1f}ms "
+              f"exec={rec['exec_s'] * 1e3:7.1f}ms")
+    print(sched.summary())
 
 
 def serve_once(args) -> None:
@@ -117,10 +158,27 @@ def main():
     ap.add_argument("--no-cache", action="store_true",
                     help="stream mode: disable the plan cache (A/B baseline)")
     ap.add_argument("--cache-capacity", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--recompile-margin", type=float, default=0.25,
+                    help="dynamic-recompilation watermark margin")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds model init, the request mix, and arrivals")
+    # continuous-batching scheduler mode
+    ap.add_argument("--scheduler", action="store_true",
+                    help="coalesce requests into shared shape buckets "
+                         "(continuous batching) instead of serving one-by-one")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="scheduler mode: Poisson arrivals per second "
+                         "(0 = closed burst, everything arrives at t=0)")
+    ap.add_argument("--max-group-batch", type=int, default=8,
+                    help="scheduler mode: batch-row capacity per group")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="scheduler mode: per-request latency objective "
+                         "(0 disables SLO accounting)")
     args = ap.parse_args()
 
-    if args.stream:
+    if args.scheduler:
+        serve_scheduled(args)
+    elif args.stream:
         serve_stream(args)
     else:
         serve_once(args)

@@ -23,8 +23,7 @@ from repro.core.planner import compile_plan
 from repro.data import make_batch
 from repro.models.model import build_model
 from repro.runtime.metrics import StepTimer, format_metrics
-from repro.runtime.train_loop import (init_opt_state, make_train_step,
-                                      train_shardings)
+from repro.runtime.train_loop import init_opt_state, make_train_step
 
 
 def main():

@@ -14,7 +14,7 @@ plus the decode path (one query against a — possibly rotating — cache).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

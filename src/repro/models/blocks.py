@@ -11,6 +11,7 @@ decides the physical sharding.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -290,8 +291,6 @@ def _routing_tables(flat_e: jnp.ndarray, e: int, cap: int, kk: int):
     return j_of_slot, s_valid, slot_of_j, j_valid
 
 
-import functools
-
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _moe_dispatch(kk, xg, tables):
@@ -480,8 +479,8 @@ def rglru_block_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
     a, gate = _lru_gates(p, xb)
     bt = gate * xb.astype(jnp.float32)
     # h_t = a_t * h_{t-1} + b_t  — associative scan (TPU-parallel recurrence)
-    def combine(l, r):
-        return (r[0] * l[0], r[0] * l[1] + r[1])
+    def combine(lhs, rhs):
+        return (rhs[0] * lhs[0], rhs[0] * lhs[1] + rhs[1])
     _, hseq = lax.associative_scan(combine, (a, bt), axis=1)
     y = (hseq * yb).astype(x.dtype)
     return x + ctx.ckpt_constrain(jnp.einsum("bsw,wd->bsd", y, p["w_out"])), 0.0

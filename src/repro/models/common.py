@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.config import MeshConfig, ModelConfig
+from repro.config import MeshConfig
 from repro.core.sharding import spec_for
 from repro.core.strategies import PlanConfig
 

@@ -9,7 +9,7 @@ unrolls its 26 layers.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,8 +98,13 @@ class Model:
     def apply(self, params, tokens: jnp.ndarray,
               extra: Optional[Dict[str, jnp.ndarray]] = None,
               ctx: ShardCtx = NULL_CTX,
-              window_override: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Returns (logits, aux_loss). ``extra``: frames / patch_embeds."""
+              window_override: Optional[int] = None,
+              last_only: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (logits, aux_loss). ``extra``: frames / patch_embeds.
+        ``last_only`` projects logits for the final position only — the
+        serving prefill path needs one next-token distribution, and the
+        (seq x vocab) logits matmul dominates an otherwise forward-only
+        pass."""
         cfg = self.cfg
         extra = extra or {}
         x = self._embed(params, tokens)
@@ -122,6 +127,9 @@ class Model:
                                       window=window, enc_out=enc_out,
                                       prefix="d." if cfg.is_encdec else "l.")
         x = rms_norm(x, params["final_ln"])
+        if last_only:
+            # the last position is never inside the vision prefix
+            return self._logits(params, x[:, -1:]), aux
         logits = self._logits(params, x)
         if prefix:
             logits = logits[:, prefix:]
@@ -178,16 +186,21 @@ class Model:
         rp = _subtree(params, "r.")
         ap = _subtree(params, "a.")
         ri = ai = 0
+        def rglru_fn(lp_, x_):
+            return B.rglru_block_apply(cfg, lp_, x_, positions, ctx=ctx)[0]
+
+        def attn_fn(lp_, x_):
+            return B.attn_block_apply(cfg, lp_, x_, positions, causal=True,
+                                      window=cfg.window_size, ctx=ctx)[0]
+
         for kind in pat:
             if kind == "r":
                 lp = jax.tree.map(lambda v, i=ri: v[i], rp)
-                fn = lambda lp_, x_: B.rglru_block_apply(cfg, lp_, x_, positions, ctx=ctx)[0]
+                fn = rglru_fn
                 ri += 1
             else:
                 lp = jax.tree.map(lambda v, i=ai: v[i], ap)
-                fn = lambda lp_, x_: B.attn_block_apply(
-                    cfg, lp_, x_, positions, causal=True,
-                    window=cfg.window_size, ctx=ctx)[0]
+                fn = attn_fn
                 ai += 1
             if ctx.plan is not None and ctx.plan.remat:
                 fn = jax.checkpoint(fn, prevent_cse=False)
@@ -366,7 +379,8 @@ class Model:
         """Forward pass producing last-position logits (batch scoring /
         prefill shape). Cache population for decode is exercised separately
         via decode_step; the prefill *shape* lowers the full forward."""
-        logits, _ = self.apply(params, tokens, extra=extra, ctx=ctx)
+        logits, _ = self.apply(params, tokens, extra=extra, ctx=ctx,
+                               last_only=True)
         return logits[:, -1]
 
 

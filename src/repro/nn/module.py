@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,18 +85,23 @@ class Sequential:
             if li.kind == "conv2d":
                 w, b = L.conv2d.init(li.attrs["c"], li.attrs["filters"],
                                      li.attrs["kernel"], sub)
-                params.append((w, b)); extras.append(())
+                params.append((w, b))
+                extras.append(())
             elif li.kind == "affine":
                 w, b = L.affine.init(li.attrs["d"], li.attrs["units"], sub)
-                params.append((w, b)); extras.append(())
+                params.append((w, b))
+                extras.append(())
             elif li.kind == "batch_norm1d":
                 g, bt, rm, rv = L.batch_norm1d.init(li.attrs["d"])
-                params.append((g, bt)); extras.append((rm, rv))
+                params.append((g, bt))
+                extras.append((rm, rv))
             elif li.kind == "batch_norm2d":
                 g, bt, rm, rv = L.batch_norm2d.init(li.attrs["c"])
-                params.append((g, bt)); extras.append((rm, rv))
+                params.append((g, bt))
+                extras.append((rm, rv))
             else:
-                params.append(()); extras.append(())
+                params.append(())
+                extras.append(())
         self.extras = extras
         return params
 
@@ -108,37 +113,45 @@ class Sequential:
             if li.kind == "conv2d":
                 out, cols = L.conv2d.forward(x, p[0], p[1], a["c"], a["h"], a["w"],
                                              a["kernel"], a.get("stride", 1), a.get("pad", 0))
-                caches.append(("conv2d", x, cols)); x = out
+                caches.append(("conv2d", x, cols))
+                x = out
             elif li.kind == "affine":
                 out = L.affine.forward(x, p[0], p[1])
-                caches.append(("affine", x)); x = out
+                caches.append(("affine", x))
+                x = out
             elif li.kind == "max_pool2d":
                 out, _ = L.max_pool2d.forward(x, a["c"], a["h"], a["w"], a["pool"])
-                caches.append(("max_pool2d", x)); x = out
+                caches.append(("max_pool2d", x))
+                x = out
             elif li.kind == "avg_pool2d":
                 out, _ = L.avg_pool2d.forward(x, a["c"], a["h"], a["w"], a["pool"])
-                caches.append(("avg_pool2d", x)); x = out
+                caches.append(("avg_pool2d", x))
+                x = out
             elif li.kind == "dropout":
                 if mode == "train":
                     key, sub = jax.random.split(key)
                     out, mask = L.dropout.forward(x, a["p"], sub)
                 else:
                     out, mask = x, jnp.ones_like(x)
-                caches.append(("dropout", mask)); x = out
+                caches.append(("dropout", mask))
+                x = out
             elif li.kind in ("relu", "leaky_relu", "elu", "sigmoid", "tanh",
                              "gelu", "softmax", "log_softmax"):
                 cls = getattr(L, li.kind)
                 out = cls.forward(x)
-                caches.append((li.kind, x)); x = out
+                caches.append((li.kind, x))
+                x = out
             elif li.kind == "batch_norm1d":
                 out, cache, _, _ = L.batch_norm1d.forward(
                     x, p[0], p[1], mode, *self.extras[len(caches)])
-                caches.append(("batch_norm1d", x, cache)); x = out
+                caches.append(("batch_norm1d", x, cache))
+                x = out
             elif li.kind == "batch_norm2d":
                 out, cache, _, _ = L.batch_norm2d.forward(
                     x, p[0], p[1], a["c"], a["h"], a["w"], mode,
                     *self.extras[len(caches)])
-                caches.append(("batch_norm2d", x, cache)); x = out
+                caches.append(("batch_norm2d", x, cache))
+                x = out
         return x, caches
 
     # -- backward (reverse chain, hand-written grads) ------------------------
@@ -192,10 +205,10 @@ class Sequential:
         def train_step(params, opt_state, x, y, key, t=1):
             probs, caches = self.forward(params, x, mode="train", key=key)
             if loss == "cross_entropy":
-                l = LOSS.cross_entropy_loss.forward(probs, y)
+                loss_val = LOSS.cross_entropy_loss.forward(probs, y)
                 dprobs = LOSS.cross_entropy_loss.backward(probs, y)
             elif loss == "l2":
-                l = LOSS.l2_loss.forward(probs, y)
+                loss_val = LOSS.l2_loss.forward(probs, y)
                 dprobs = LOSS.l2_loss.backward(probs, y)
             else:
                 raise ValueError(loss)
@@ -203,13 +216,17 @@ class Sequential:
             new_params, new_state = [], []
             for p, g, s in zip(params, grads, opt_state):
                 if not p:
-                    new_params.append(p); new_state.append(s); continue
+                    new_params.append(p)
+                    new_state.append(s)
+                    continue
                 ps, ss = [], []
                 for pj, gj, sj in zip(p, g, s):
                     pn, sn = opt.update(pj, gj, sj, lr=lr, t=t)
-                    ps.append(pn); ss.append(sn)
-                new_params.append(tuple(ps)); new_state.append(tuple(ss))
-            return new_params, new_state, l
+                    ps.append(pn)
+                    ss.append(sn)
+                new_params.append(tuple(ps))
+                new_state.append(tuple(ss))
+            return new_params, new_state, loss_val
 
         return train_step
 

@@ -13,7 +13,7 @@ compression (DESIGN.md §4).
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -154,7 +154,7 @@ def tree_update(name: str, params, grads, state, **hypers):
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
 
 
 def clip_by_global_norm(tree, max_norm: float):

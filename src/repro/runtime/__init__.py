@@ -4,11 +4,18 @@ from repro.runtime.train_loop import (init_opt_state, make_train_step,
 from repro.runtime.serve_loop import (PlanServer, ServeRequest,
                                       cache_shardings, greedy_decode,
                                       make_decode_step, make_prefill)
-from repro.runtime.metrics import (LatencyStats, PlanCacheMetrics, StepTimer,
-                                   format_metrics, serve_summary)
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     QueuedRequest, RequestQueue,
+                                     simulate_arrivals)
+from repro.runtime.metrics import (LatencyStats, PlanCacheMetrics,
+                                   SchedulerMetrics, StepTimer,
+                                   format_metrics, scheduler_summary,
+                                   serve_summary)
 
 __all__ = ["make_train_step", "init_opt_state", "opt_state_specs",
            "train_shardings", "batch_specs", "make_decode_step",
            "make_prefill", "cache_shardings", "greedy_decode", "PlanServer",
-           "ServeRequest", "StepTimer", "format_metrics", "LatencyStats",
-           "PlanCacheMetrics", "serve_summary"]
+           "ServeRequest", "ContinuousBatchingScheduler", "RequestQueue",
+           "QueuedRequest", "simulate_arrivals", "StepTimer",
+           "format_metrics", "LatencyStats", "PlanCacheMetrics",
+           "SchedulerMetrics", "scheduler_summary", "serve_summary"]

@@ -87,6 +87,83 @@ def serve_summary(cache: PlanCacheMetrics, latency: LatencyStats) -> str:
             f"compile_s={cache.compile_seconds:.2f}  |  {latency.summary()}")
 
 
+@dataclass
+class SchedulerMetrics:
+    """Continuous-batching accounting: queueing vs. execution latency per
+    request, coalescing effectiveness, and SLO attainment.
+
+    ``slo_s`` is the per-request total-latency objective (admission to last
+    token); 0 disables SLO accounting. ``batch_slots_used`` /
+    ``batch_slots_total`` measure how well coalescing fills each group's
+    batch-bucket capacity (the anti-padding story: sequential serving pads
+    every request up to its own bucket alone)."""
+
+    slo_s: float = 0.0
+    admitted: int = 0
+    completed: int = 0
+    groups: int = 0
+    coalesced_requests: int = 0     # requests that shared a group
+    batch_slots_used: int = 0       # sum of member request batches
+    batch_slots_total: int = 0      # sum of group batch-bucket capacities
+    slo_met: int = 0
+    slo_missed: int = 0
+    queue_latency: LatencyStats = field(default_factory=LatencyStats)
+    exec_latency: LatencyStats = field(default_factory=LatencyStats)
+    total_latency: LatencyStats = field(default_factory=LatencyStats)
+
+    @property
+    def bucket_fill(self) -> float:
+        """Fraction of coalesced batch-bucket slots holding real requests."""
+        return (self.batch_slots_used / self.batch_slots_total
+                if self.batch_slots_total else 0.0)
+
+    @property
+    def slo_attainment(self) -> float:
+        judged = self.slo_met + self.slo_missed
+        return self.slo_met / judged if judged else 1.0
+
+    def observe_group(self, member_batches, bucket_batch: int) -> None:
+        self.groups += 1
+        if len(member_batches) > 1:
+            self.coalesced_requests += len(member_batches)
+        self.batch_slots_used += sum(member_batches)
+        self.batch_slots_total += bucket_batch
+
+    def observe_request(self, queue_s: float, exec_s: float) -> None:
+        self.completed += 1
+        total = queue_s + exec_s
+        self.queue_latency.record(queue_s)
+        self.exec_latency.record(exec_s)
+        self.total_latency.record(total)
+        if self.slo_s > 0:
+            if total <= self.slo_s:
+                self.slo_met += 1
+            else:
+                self.slo_missed += 1
+
+    def summary(self) -> str:
+        ms = 1e3
+        line = (f"scheduler: admitted={self.admitted} "
+                f"completed={self.completed} groups={self.groups} "
+                f"coalesced={self.coalesced_requests} "
+                f"bucket_fill={self.bucket_fill:.2f}  |  "
+                f"queue p50={self.queue_latency.percentile(50) * ms:.1f}ms "
+                f"p95={self.queue_latency.percentile(95) * ms:.1f}ms  "
+                f"exec p50={self.exec_latency.percentile(50) * ms:.1f}ms "
+                f"p95={self.exec_latency.percentile(95) * ms:.1f}ms")
+        if self.slo_s > 0:
+            line += (f"  |  slo<{self.slo_s * ms:.0f}ms: "
+                     f"met={self.slo_met} missed={self.slo_missed} "
+                     f"attainment={self.slo_attainment:.2f}")
+        return line
+
+
+def scheduler_summary(sched: "SchedulerMetrics", cache: PlanCacheMetrics,
+                      latency: LatencyStats) -> str:
+    """Two-line report: scheduler accounting over the plan-cache line."""
+    return sched.summary() + "\n" + serve_summary(cache, latency)
+
+
 def format_metrics(rec: Dict) -> str:
     parts = []
     for k, v in rec.items():

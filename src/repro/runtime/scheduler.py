@@ -1,0 +1,326 @@
+"""Continuous-batching request scheduler on top of :class:`PlanServer`.
+
+The plan cache (PR 1) made steady-state serving cheap *per request*; this
+module makes it cheap *per token* by filling each shape bucket's batch
+dimension with real requests instead of padding every request up to its
+bucket alone. The scheduler is the serving-side analogue of SystemML's
+parfor batching argument (and BigDL/MMLSpark's coarse-grained batched
+scoring): one compiled plan, many concurrent requests.
+
+Mechanics:
+
+- :class:`RequestQueue` admits :class:`ServeRequest`\\ s asynchronously
+  (each stamped with an arrival time) and coalesces compatible pending
+  requests — same power-of-two context bucket — into a shared *group*
+  whose batch rows are the concatenation of the member requests.
+- :class:`ContinuousBatchingScheduler` interleaves prefill and decode:
+  each scheduler tick admits due arrivals, prefills at most one newly
+  coalesced group (drawing the prefill plan from the same
+  :class:`~repro.core.plan_cache.PlanCache` as decode, via
+  ``PlanServer.prefill_entry``), then advances every active group by one
+  decode step. New arrivals therefore start prefilling between the decode
+  steps of in-flight groups rather than behind them.
+- Per-request queueing vs. execution latency and SLO attainment are
+  tracked in :class:`~repro.runtime.metrics.SchedulerMetrics`.
+
+Arrivals are simulated against a virtual clock that never runs slower
+than the real one: execution timing is measured, idle gaps between
+arrivals are skipped instead of slept through.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import InputShape
+from repro.core.plan_cache import BucketPolicy, CacheEntry, bucket_pow2
+from repro.core.strategies import RuntimeStats
+from repro.runtime.metrics import SchedulerMetrics
+from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+
+@dataclass
+class QueuedRequest:
+    """One admitted request plus its lifecycle timestamps (virtual clock)."""
+
+    rid: int
+    req: ServeRequest
+    arrival_s: float
+    start_s: float = -1.0        # group formed: prefill began
+    finish_s: float = -1.0       # last requested token decoded
+    rows: Tuple[int, int] = (0, 0)  # this request's rows in its group batch
+
+    @property
+    def queue_s(self) -> float:
+        return max(0.0, self.start_s - self.arrival_s)
+
+    @property
+    def exec_s(self) -> float:
+        return max(0.0, self.finish_s - self.start_s)
+
+    @property
+    def total_s(self) -> float:
+        return max(0.0, self.finish_s - self.arrival_s)
+
+
+class RequestQueue:
+    """FIFO admission with bucket-aware coalescing.
+
+    ``next_group`` is deliberately head-of-line fair: the *oldest* pending
+    request picks the context bucket, and only same-bucket requests may
+    join its group (in arrival order, until the group's batch capacity is
+    full). A popular bucket can therefore never starve an unpopular one —
+    it just rides along whenever its own head reaches the front.
+    """
+
+    def __init__(self, policy: BucketPolicy = BucketPolicy(),
+                 max_group_batch: int = 8):
+        if max_group_batch < 1:
+            raise ValueError("max_group_batch must be >= 1")
+        self.policy = policy
+        self.max_group_batch = max_group_batch
+        self._pending: List[QueuedRequest] = []
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending(self) -> Tuple[QueuedRequest, ...]:
+        return tuple(self._pending)
+
+    def seq_bucket(self, req: ServeRequest) -> int:
+        return bucket_pow2(req.context, self.policy.min_seq)
+
+    def admit(self, req: ServeRequest, arrival_s: float = 0.0) -> QueuedRequest:
+        qr = QueuedRequest(rid=self._next_rid, req=req, arrival_s=arrival_s)
+        self._next_rid += 1
+        self._pending.append(qr)
+        return qr
+
+    def next_group(self) -> List[QueuedRequest]:
+        """Pop the next coalesced group (empty list if nothing pending).
+
+        The head-of-line request always joins (even if its batch alone
+        exceeds ``max_group_batch`` — it must be served eventually); later
+        same-bucket requests fill the remaining batch slots in FIFO order,
+        skipping any too big for the space left.
+        """
+        if not self._pending:
+            return []
+        head = self._pending[0]
+        sb = self.seq_bucket(head.req)
+        group: List[QueuedRequest] = [head]
+        used = head.req.batch
+        for qr in self._pending[1:]:
+            if self.seq_bucket(qr.req) != sb:
+                continue
+            if used + qr.req.batch > self.max_group_batch:
+                continue
+            group.append(qr)
+            used += qr.req.batch
+        for qr in group:
+            self._pending.remove(qr)
+        return group
+
+
+class _Clock:
+    """Virtual clock: real elapsed time plus skipped idle gaps."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._skew = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skew
+
+    def advance_to(self, t: float) -> None:
+        self._skew += max(0.0, t - self.now())
+
+
+@dataclass
+class _Group:
+    """One coalesced batch in flight: shared KV cache + decode plan."""
+
+    members: List[QueuedRequest]
+    entry: CacheEntry                 # decode plan for the group's bucket
+    context: int                      # max member context (same bucket)
+    kv: Any = None
+    toks: Any = None
+    pos: int = 0
+    steps_done: int = 0
+    max_steps: int = 0
+    decoded: List[Any] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.max_steps
+
+    @property
+    def total_batch(self) -> int:
+        return sum(m.req.batch for m in self.members)
+
+
+class ContinuousBatchingScheduler:
+    """Drives a :class:`PlanServer` with coalesced groups instead of
+    one-request-at-a-time ``handle`` calls.
+
+    Both plan families come from the server's single :class:`PlanCache`:
+    ``kind="prefill"`` entries for the batched prompt pass, ``kind="decode"``
+    entries for the shared-cache generation steps.
+    """
+
+    def __init__(
+        self,
+        server: PlanServer,
+        *,
+        max_group_batch: int = 8,
+        slo_ms: float = 0.0,
+        queue: Optional[RequestQueue] = None,
+    ):
+        self.server = server
+        self.queue = queue or RequestQueue(server.policy, max_group_batch)
+        self.metrics = SchedulerMetrics(slo_s=slo_ms / 1e3)
+        self.active: List[_Group] = []
+        self.results: List[Dict[str, Any]] = []
+
+    # -- group lifecycle ---------------------------------------------------
+    def _start_group(self, members: List[QueuedRequest], now: float) -> _Group:
+        srv = self.server
+        total_batch = sum(m.req.batch for m in members)
+        context = max(m.req.context for m in members)
+        row = 0
+        for m in members:
+            m.start_s = now
+            m.rows = (row, row + m.req.batch)
+            row += m.req.batch
+
+        # prefill: batched prompt pass at the group's bucket, plan cached
+        first = srv.prefill_first_token(total_batch, context)
+
+        # decode: shared KV cache at the same bucket family
+        entry = srv.decode_entry(total_batch, context)
+        b, s = entry.key.batch_bucket, entry.key.seq_bucket
+        group = _Group(
+            members=members,
+            entry=entry,
+            context=context,
+            kv=srv.model.init_cache(b, s),
+            # prefill and decode share the bucket policy, so the prefill
+            # logits already carry one first token per bucket row
+            toks=first,
+            max_steps=max(m.req.new_tokens for m in members),
+        )
+        self.metrics.observe_group([m.req.batch for m in members], b)
+        return group
+
+    def _decode_tick(self, group: _Group, clock: _Clock) -> None:
+        srv = self.server
+        logits, group.kv = group.entry.step_fn(
+            srv.params, group.kv, group.toks, jnp.int32(group.pos))
+        group.toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        jax.block_until_ready(group.toks)
+        group.decoded.append(group.toks)
+        group.pos += 1
+        group.steps_done += 1
+        now = clock.now()
+        for m in group.members:
+            if m.finish_s < 0 and group.steps_done >= m.req.new_tokens:
+                m.finish_s = now
+                self._complete(m, group)
+
+    def _complete(self, m: QueuedRequest, group: _Group) -> None:
+        self.metrics.observe_request(m.queue_s, m.exec_s)
+        lo, hi = m.rows
+        toks = jnp.concatenate(group.decoded[: m.req.new_tokens], axis=1)
+        self.results.append({
+            "rid": m.rid,
+            "batch": m.req.batch,
+            "context": m.req.context,
+            "bucket": (group.entry.key.batch_bucket,
+                       group.entry.key.seq_bucket),
+            "group_size": len(group.members),
+            "tokens": toks[lo:hi],
+            "queue_s": m.queue_s,
+            "exec_s": m.exec_s,
+            "total_s": m.total_s,
+        })
+
+    def _retire_group(self, group: _Group) -> None:
+        """Observed runtime statistics feed dynamic recompilation exactly
+        as in the sequential path."""
+        srv = self.server
+        shape = InputShape(
+            f"group_{group.total_batch}x{group.context}",
+            group.context, group.total_batch, "decode")
+        watermark = srv.observed_watermark(group.entry, group.kv, group.toks)
+        srv.observe(group.entry.key,
+                    RuntimeStats(shape=shape, watermark_bytes=watermark))
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, arrivals: Iterable[Tuple[float, ServeRequest]]
+            ) -> List[Dict[str, Any]]:
+        """Serve a stream of ``(arrival_s, request)`` pairs to completion.
+
+        Returns one record per request (completion order). Tick structure:
+        admit due arrivals → coalesce + prefill at most one new group →
+        one decode step for every active group. Prefill work for new
+        arrivals therefore interleaves with decode of in-flight groups.
+        """
+        todo = sorted(arrivals, key=lambda a: a[0])
+        clock = _Clock()
+        idx = 0
+        while idx < len(todo) or len(self.queue) or self.active:
+            now = clock.now()
+            while idx < len(todo) and todo[idx][0] <= now:
+                self.queue.admit(todo[idx][1], todo[idx][0])
+                self.metrics.admitted += 1
+                idx += 1
+            if not self.active and not len(self.queue):
+                # idle: skip ahead to the next arrival instead of sleeping
+                clock.advance_to(todo[idx][0])
+                continue
+            if len(self.queue):
+                members = self.queue.next_group()
+                if members:
+                    self.active.append(self._start_group(members, clock.now()))
+            for group in list(self.active):
+                self._decode_tick(group, clock)
+                if group.done:
+                    self._retire_group(group)
+                    self.active.remove(group)
+        return self.results
+
+    def summary(self) -> str:
+        from repro.runtime.metrics import scheduler_summary
+        # the scheduler's own total latency, not server.latency — handle()
+        # is never called on this path, so the server accumulator is empty
+        return scheduler_summary(self.metrics, self.server.metrics,
+                                 self.metrics.total_latency)
+
+
+def simulate_arrivals(
+    requests: Sequence[ServeRequest],
+    rate_per_s: float = 0.0,
+    seed: int = 0,
+) -> List[Tuple[float, ServeRequest]]:
+    """Stamp requests with Poisson-process arrival times at ``rate_per_s``
+    (exponential inter-arrival gaps, seeded). ``rate_per_s <= 0`` means a
+    closed burst: everything arrives at t=0 (maximal coalescing pressure).
+    """
+    import random
+
+    if rate_per_s <= 0:
+        return [(0.0, r) for r in requests]
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for r in requests:
+        t += rng.expovariate(rate_per_s)
+        out.append((t, r))
+    return out

@@ -26,7 +26,7 @@ from repro.config import InputShape, MeshConfig, ModelConfig, TPU_V5E, HardwareS
 from repro.core.plan_cache import (BucketPolicy, CacheEntry, PlanCache,
                                    PlanKey)
 from repro.core.planner import PlanCompiler
-from repro.core.sharding import spec_for, tree_specs
+from repro.core.sharding import tree_specs
 from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats
 from repro.models.common import ShardCtx
 from repro.runtime.metrics import LatencyStats, serve_summary
@@ -128,6 +128,7 @@ class PlanServer:
         recompile_margin: float = 0.25,
         policy: BucketPolicy = BucketPolicy(),
         seed: int = 0,
+        prefill: bool = False,
     ):
         from repro.models.model import build_model
 
@@ -146,47 +147,75 @@ class PlanServer:
         self.enable_cache = enable_cache
         self.recompile_margin = recompile_margin
         self.policy = policy
+        # prefill=True: handle() runs the cached-prefill prompt pass before
+        # decoding (full serving semantics); False keeps the PR-1 decode-only
+        # request shape. The scheduler always prefills its groups.
+        self.prefill = prefill
 
     # ------------------------------------------------------------------
     def _build_step(self, plan: ExecutionPlan):
+        if plan.shape.kind == "prefill":
+            return jax.jit(make_prefill(self.model, plan.config, self.mesh_cfg))
         return jax.jit(make_decode_step(self.model, plan.config, self.mesh_cfg))
 
     def _compile_entry(self, key: PlanKey) -> CacheEntry:
         t0 = time.perf_counter()
         plan = self.compiler.compile(self.cfg, key.bucket_shape(),
-                                     self.mesh_cfg)
+                                     self.mesh_cfg, dtype=self.dtype_name)
         entry = CacheEntry(key=key, plan=plan, step_fn=self._build_step(plan))
         self.metrics.compile_seconds += time.perf_counter() - t0
         return entry
 
-    # ------------------------------------------------------------------
-    def handle(self, req: ServeRequest) -> Dict[str, Any]:
-        """Serve one request; returns tokens + per-request accounting."""
-        t0 = time.perf_counter()
-        shape = InputShape(f"req_{req.batch}x{req.context}",
-                           req.context, req.batch, "decode")
-        key = PlanKey.for_request(self.cfg, self.mesh_cfg, self.dtype_name,
-                                  shape, self.policy)
+    def _key_for(self, batch: int, context: int, kind: str) -> PlanKey:
+        shape = InputShape(f"req_{batch}x{context}", context, batch, kind)
+        return PlanKey.for_request(self.cfg, self.mesh_cfg, self.dtype_name,
+                                   shape, self.policy)
+
+    def _entry_for(self, key: PlanKey) -> CacheEntry:
         if self.enable_cache:
-            entry = self.cache.get_or_compile(
+            return self.cache.get_or_compile(
                 key, lambda: self._compile_entry(key))
-        else:
-            # pre-cache behaviour: full planner walk + fresh XLA trace
-            self.metrics.misses += 1
-            self.metrics.compiles += 1
-            entry = self._compile_entry(key)
+        # pre-cache behaviour: full planner walk + fresh XLA trace
+        self.metrics.misses += 1
+        self.metrics.compiles += 1
+        return self._compile_entry(key)
 
-        # execute at the bucket shape (requests pad up to the bucket)
-        b, s = key.batch_bucket, key.seq_bucket
-        kv = self.model.init_cache(b, s)
-        first = jnp.ones((b, 1), jnp.int32)
-        toks, kv = greedy_decode(self.model, self.params, kv, first, 0,
-                                 req.new_tokens, decode_step=entry.step_fn)
-        jax.block_until_ready(toks)
+    def decode_entry(self, batch: int, context: int) -> CacheEntry:
+        """Bucketed decode plan + jitted decode step (cache-backed)."""
+        return self._entry_for(self._key_for(batch, context, "decode"))
 
-        # runtime statistics: measured live bytes per chip this request.
-        # Each tensor class only divides across the chips the plan actually
-        # shards it over; replicated layouts hold a full copy per chip.
+    def prefill_entry(self, batch: int, context: int) -> CacheEntry:
+        """Bucketed prefill plan + jitted prefill fn from the same cache.
+
+        The prefill path shares the :class:`PlanCache` with decode —
+        ``PlanKey.kind`` keeps the key spaces disjoint, so one server holds
+        both plan families and the scheduler draws each from the cache."""
+        return self._entry_for(self._key_for(batch, context, "prefill"))
+
+    def run_prefill(self, entry: CacheEntry, tokens=None):
+        """Execute a cached prefill plan at its bucket shape; returns
+        last-position logits ``(batch_bucket, vocab)``."""
+        b, s = entry.key.batch_bucket, entry.key.seq_bucket
+        if tokens is None:
+            tokens = jnp.ones((b, s), jnp.int32)
+        logits = entry.step_fn(self.params, {"tokens": tokens})
+        jax.block_until_ready(logits)
+        return logits
+
+    def prefill_first_token(self, batch: int, context: int) -> Any:
+        """Prompt pass through the cached prefill plan; returns the greedy
+        first decode token per bucket row, shape ``(batch_bucket, 1)``.
+        Prefill and decode share the bucket policy, so the rows line up
+        with the decode bucket of the same request shape."""
+        entry = self.prefill_entry(batch, context)
+        logits = self.run_prefill(entry)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    # ------------------------------------------------------------------
+    def observed_watermark(self, entry: CacheEntry, kv, toks) -> float:
+        """Measured live bytes per chip for one executed request. Each
+        tensor class only divides across the chips the plan actually shards
+        it over; replicated layouts hold a full copy per chip."""
         cfgp = entry.plan.config
         mesh = self.mesh_cfg
         param_div = 1
@@ -200,19 +229,52 @@ class PlanServer:
                 kv_div *= sz
         if cfgp.cache_heads_over_model:
             kv_div *= mesh.model_parallelism
-        watermark = (self._params_bytes / param_div
-                     + (_tree_bytes(kv) + toks.nbytes) / kv_div)
+        return (self._params_bytes / param_div
+                + (_tree_bytes(kv) + toks.nbytes) / kv_div)
+
+    def observe(self, key: PlanKey, stats: RuntimeStats
+                ) -> Tuple[Optional[CacheEntry], Tuple[str, ...]]:
+        """Feed observed runtime statistics back into the cache (dynamic
+        recompilation). Compile time is billed only when ``refresh``
+        actually re-entered the compiler — a rebucket that reuses an
+        existing entry at the grown bucket compiles nothing and costs
+        nothing."""
+        if not self.enable_cache:
+            return None, ()
+        t_r = time.perf_counter()
+        recompiles_before = self.metrics.recompiles
+        refreshed, reasons = self.cache.refresh(
+            key, stats, self.compiler, margin=self.recompile_margin,
+            build_step=self._build_step, policy=self.policy)
+        if self.metrics.recompiles > recompiles_before:
+            self.metrics.compile_seconds += time.perf_counter() - t_r
+        return refreshed, reasons
+
+    # ------------------------------------------------------------------
+    def handle(self, req: ServeRequest) -> Dict[str, Any]:
+        """Serve one request; returns tokens + per-request accounting."""
+        t0 = time.perf_counter()
+        key = self._key_for(req.batch, req.context, "decode")
+        entry = self._entry_for(key)
+
+        # execute at the bucket shape (requests pad up to the bucket)
+        b, s = key.batch_bucket, key.seq_bucket
+        kv = self.model.init_cache(b, s)
+        if self.prefill:
+            first = self.prefill_first_token(req.batch, req.context)
+        else:
+            first = jnp.ones((b, 1), jnp.int32)
+        toks, kv = greedy_decode(self.model, self.params, kv, first, 0,
+                                 req.new_tokens, decode_step=entry.step_fn)
+        jax.block_until_ready(toks)
+
+        watermark = self.observed_watermark(entry, kv, toks)
+        shape = InputShape(f"req_{req.batch}x{req.context}",
+                           req.context, req.batch, "decode")
         stats = RuntimeStats(shape=shape, watermark_bytes=watermark)
-        reasons: Tuple[str, ...] = ()
-        if self.enable_cache:
-            t_r = time.perf_counter()
-            refreshed, reasons = self.cache.refresh(
-                key, stats, self.compiler, margin=self.recompile_margin,
-                build_step=self._build_step, policy=self.policy)
-            if reasons:
-                self.metrics.compile_seconds += time.perf_counter() - t_r
-            if refreshed is not None:
-                entry = refreshed
+        refreshed, reasons = self.observe(key, stats)
+        if refreshed is not None:
+            entry = refreshed
         # latency includes any in-request recompilation — that cost is the
         # mechanism under measurement, not overhead to hide
         latency = time.perf_counter() - t0

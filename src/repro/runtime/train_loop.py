@@ -9,8 +9,7 @@ generated execution plan, here realized as a jitted SPMD program.
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -147,6 +146,8 @@ def train_shardings(model, plan: PlanConfig, mesh_cfg: MeshConfig,
                  for s, a in zip(o_specs[k], o_axes[k]))
         for k in o_specs
     }
-    as_shard = lambda tree: jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
-                                         is_leaf=lambda x: isinstance(x, P))
+    def as_shard(tree):
+        return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
     return (pspecs, p_part, as_shard(p_part)), (o_specs, o_part, as_shard(o_part))

@@ -157,7 +157,8 @@ def test_simple_rnn_backward():
 def test_lstm_backward():
     x = jax.random.normal(KEY, (2, 5, 4))
     wx, wh, b = L.lstm.init(4, 3, KEY)
-    h0 = jnp.zeros((2, 3)); c0 = jnp.zeros((2, 3))
+    h0 = jnp.zeros((2, 3))
+    c0 = jnp.zeros((2, 3))
     hs, _, cache = L.lstm.forward(x, wx, wh, b, h0, c0)
     dhs = jax.random.normal(KEY, hs.shape)
     got = L.lstm.backward(dhs, cache, x, wx, wh, b, h0, c0)

@@ -1,9 +1,7 @@
 """The paper's six optimizers: convergence on a quadratic + slot counts +
 plan-chosen state compression."""
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.nn.optim import (OPTIMIZERS, OPTIMIZER_SLOTS, clip_by_global_norm,

@@ -1,0 +1,223 @@
+"""Continuous-batching scheduler: bucket-aware coalescing, queue fairness,
+prefill-path plan caching, and the two PR-2 bugfixes (dtype-aware memory
+estimates -> zero spurious fp32 recompiles; compile_seconds billed only when
+a recompile actually ran)."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.config import SINGLE_DEVICE_MESH, InputShape, TrainConfig, TPU_V5E
+from repro.configs import get_config
+from repro.core.memory import dtype_bytes, estimate_memory
+from repro.core.plan_cache import BucketPolicy
+from repro.core.planner import compile_plan
+from repro.core.strategies import RuntimeStats
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     RequestQueue, simulate_arrivals)
+from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+CFG = get_config("yi-6b-smoke")
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue: coalescing + fairness
+# ---------------------------------------------------------------------------
+
+
+def test_coalescing_picks_covering_bucket():
+    q = RequestQueue(BucketPolicy(min_batch=1, min_seq=16), max_group_batch=8)
+    q.admit(ServeRequest(1, 100))   # bucket 128
+    q.admit(ServeRequest(2, 90))    # bucket 128 — joins
+    q.admit(ServeRequest(1, 60))    # bucket 64  — different bucket
+    q.admit(ServeRequest(2, 120))   # bucket 128 — joins
+    group = q.next_group()
+    assert [m.req.context for m in group] == [100, 90, 120]
+    assert sum(m.req.batch for m in group) == 5
+    # the other bucket's request is untouched, next in line
+    assert [m.req.context for m in q.pending] == [60]
+
+
+def test_coalescing_respects_batch_capacity():
+    q = RequestQueue(max_group_batch=4)
+    q.admit(ServeRequest(2, 100))
+    q.admit(ServeRequest(3, 100))   # would overflow 4 — skipped this round
+    q.admit(ServeRequest(2, 100))   # fills the remaining 2 slots
+    group = q.next_group()
+    assert [m.req.batch for m in group] == [2, 2]
+    # the skipped request becomes head-of-line and is never starved
+    group2 = q.next_group()
+    assert [m.req.batch for m in group2] == [3]
+    assert len(q) == 0
+
+
+def test_queue_fairness_head_of_line_picks_bucket():
+    """The oldest pending request defines the group bucket, even when a
+    different bucket has more pending work (no starvation by popularity)."""
+    q = RequestQueue(max_group_batch=8)
+    q.admit(ServeRequest(1, 40))     # bucket 64, oldest
+    for _ in range(5):
+        q.admit(ServeRequest(1, 100))  # bucket 128, popular
+    group = q.next_group()
+    assert all(q.seq_bucket(m.req) == 64 for m in group)
+    assert group[0].req.context == 40
+
+
+def test_oversized_head_is_served_alone():
+    q = RequestQueue(max_group_batch=4)
+    q.admit(ServeRequest(6, 100))   # exceeds capacity on its own
+    group = q.next_group()
+    assert len(group) == 1 and group[0].req.batch == 6
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end (tiny model, CPU)
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_coalesces_and_completes_all():
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    sched = ContinuousBatchingScheduler(srv, max_group_batch=8)
+    reqs = [ServeRequest(1, 100, 2), ServeRequest(2, 90, 2),
+            ServeRequest(1, 120, 3), ServeRequest(1, 40, 2)]
+    results = sched.run(simulate_arrivals(reqs))
+    assert len(results) == 4
+    assert sched.metrics.admitted == 4 and sched.metrics.completed == 4
+    # closed burst: the three 128-bucket requests share one group
+    by_rid = {r["rid"]: r for r in results}
+    assert by_rid[0]["group_size"] == 3
+    assert by_rid[0]["bucket"] == (4, 128)
+    assert by_rid[3]["group_size"] == 1
+    # per-request tokens come back at the request's own batch size
+    assert by_rid[1]["tokens"].shape == (2, 2)
+    assert by_rid[2]["tokens"].shape == (1, 3)
+    assert sched.metrics.groups == 2
+    assert sched.metrics.coalesced_requests == 3
+    assert sched.metrics.queue_latency.count == 4
+    assert sched.summary()  # renders
+
+
+def test_scheduler_prefill_plans_come_from_cache():
+    """Both plan families live in the server's one PlanCache: a second group
+    in the same bucket hits both the prefill and the decode entry."""
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    sched = ContinuousBatchingScheduler(srv, max_group_batch=2)
+    # two groups in the same (2, 128) bucket: capacity forces the split
+    reqs = [ServeRequest(2, 100, 1), ServeRequest(2, 100, 1)]
+    sched.run(simulate_arrivals(reqs))
+    kinds = {(k.kind, k.batch_bucket, k.seq_bucket) for k in srv.cache.keys()}
+    assert ("prefill", 2, 128) in kinds and ("decode", 2, 128) in kinds
+    assert srv.metrics.compiles == 2          # one prefill + one decode
+    assert srv.metrics.hits >= 2              # second group hit both
+    assert sched.metrics.groups == 2
+
+
+def test_scheduler_interleaves_prefill_between_decode_steps():
+    """A request arriving while a long decode is in flight starts (and can
+    finish) before the first group drains — continuous, not sequential."""
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    sched = ContinuousBatchingScheduler(srv, max_group_batch=4)
+    arrivals = [(0.0, ServeRequest(1, 100, 12)),   # long decode
+                (0.0, ServeRequest(1, 40, 1))]     # different bucket, short
+    results = sched.run(arrivals)
+    order = [r["rid"] for r in results]
+    assert order[0] == 1                      # short request finished first
+    assert sched.metrics.groups == 2
+
+
+def test_scheduler_slo_accounting():
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    sched = ContinuousBatchingScheduler(srv, max_group_batch=8,
+                                        slo_ms=1e7)  # impossible to miss
+    sched.run(simulate_arrivals([ServeRequest(1, 40, 1)]))
+    assert sched.metrics.slo_met == 1 and sched.metrics.slo_missed == 0
+    assert sched.metrics.slo_attainment == 1.0
+
+
+def test_plan_server_prefill_mode_seeds_first_token():
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, prefill=True)
+    out = srv.handle(ServeRequest(2, 100, 2))
+    assert out["tokens"].shape == (2, 2)
+    kinds = {k.kind for k in srv.cache.keys()}
+    assert kinds == {"prefill", "decode"}
+
+
+# ---------------------------------------------------------------------------
+# bugfix: dtype-aware memory estimates
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_bytes_mapping():
+    assert dtype_bytes("float32") == 4
+    assert dtype_bytes("bfloat16") == 2
+    assert dtype_bytes("no-such-dtype") == 4   # worst case, never under
+
+
+def test_estimate_memory_follows_dtype():
+    shape = InputShape("t", 128, 2, "decode")
+    plan = compile_plan(CFG, shape, SINGLE_DEVICE_MESH).config
+    bf16 = estimate_memory(CFG, shape, SINGLE_DEVICE_MESH, plan,
+                           TrainConfig(), TPU_V5E, dtype="bfloat16")
+    fp32 = estimate_memory(CFG, shape, SINGLE_DEVICE_MESH, plan,
+                           TrainConfig(), TPU_V5E, dtype="float32")
+    assert fp32.per_device["params"] == pytest.approx(
+        2 * bf16.per_device["params"])
+    assert fp32.per_device["kv_cache"] == pytest.approx(
+        2 * bf16.per_device["kv_cache"])
+
+
+def test_execution_plan_records_dtype():
+    p32 = compile_plan(CFG, InputShape("t", 128, 2, "decode"),
+                       SINGLE_DEVICE_MESH, dtype="float32")
+    p16 = compile_plan(CFG, InputShape("t", 128, 2, "decode"),
+                       SINGLE_DEVICE_MESH)
+    assert p32.dtype == "float32" and p16.dtype == "bfloat16"
+    assert p32.memory.per_device["params"] > p16.memory.per_device["params"]
+    assert "float32" in p32.explain()
+
+
+def test_fp32_stream_serves_with_zero_recompiles():
+    """The headline bugfix: an fp32 server's first estimate per bucket is
+    already fp32-sized, so no bucket burns a corrective recompile."""
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    for b, c in [(1, 40), (2, 100), (1, 90), (2, 100), (1, 40), (4, 60)]:
+        out = srv.handle(ServeRequest(b, c, 1))
+        assert not out["recompiled"], out["recompile_reasons"]
+    assert srv.metrics.recompiles == 0
+
+
+# ---------------------------------------------------------------------------
+# bugfix: compile_seconds billed only for actual recompiles
+# ---------------------------------------------------------------------------
+
+
+def test_rebucket_reuse_leaves_compile_seconds_unchanged():
+    """A refresh that rebuckets into an existing entry compiles nothing, so
+    it must not be billed to compile_seconds (the old code billed whenever
+    ``reasons`` was non-empty)."""
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    srv.handle(ServeRequest(2, 100, 1))   # installs (2, 128)
+    srv.handle(ServeRequest(2, 300, 1))   # installs (2, 512)
+    small = srv._key_for(2, 100, "decode")
+    before = srv.metrics.compile_seconds
+    recompiles_before = srv.metrics.recompiles
+    # observed shape outgrew the small bucket; the grown bucket already
+    # holds a compiled entry -> reuse, no planner walk, no billing
+    refreshed, reasons = srv.observe(
+        small, RuntimeStats(shape=InputShape("grown", 300, 2, "decode")))
+    assert reasons and "exceeds compiled bucket" in reasons[0]
+    assert refreshed is not None
+    assert srv.metrics.recompiles == recompiles_before
+    assert srv.metrics.compile_seconds == before
+
+
+def test_real_recompile_still_billed():
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    srv.handle(ServeRequest(2, 100, 1))
+    key = srv._key_for(2, 100, "decode")
+    entry = srv.cache.get(key)
+    before = srv.metrics.compile_seconds
+    stats = RuntimeStats(shape=key.bucket_shape(),
+                         watermark_bytes=3.0 * entry.plan.memory.total)
+    _, reasons = srv.observe(key, stats)
+    assert reasons and srv.metrics.recompiles == 1
+    assert srv.metrics.compile_seconds > before
