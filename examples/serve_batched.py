@@ -43,17 +43,25 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    # prefill by stepping the decode path over the prompt (correct for all
-    # families incl. recurrent state; a fused prefill kernel is the TPU
-    # fast path, exercised by the prefill_32k dry-run shape)
-    cache = model.init_cache(args.batch, context)
+    # one full-sequence prefill pass scores the prompt AND populates the
+    # decode cache (prefill→decode handoff): decode continues at the
+    # prompt's position instead of restarting from zeros
     step = jax.jit(make_decode_step(model, plan.config, mesh_cfg))
     t0 = time.perf_counter()
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+    if model.supports_handoff:
+        last_logits, cache = model.prefill(params, prompts, cache_len=context)
+    else:
+        # enc-dec / modality frontends: no handoff — step the decode path
+        # over the prompt (correct for all families incl. recurrent state)
+        cache = model.init_cache(args.batch, context)
+        for t in range(args.prompt_len):
+            logits, cache = step(params, cache, prompts[:, t:t + 1],
+                                 jnp.int32(t))
+        last_logits = logits[:, -1]
+    jax.block_until_ready(last_logits)
     prefill_s = time.perf_counter() - t0
 
-    first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
     t0 = time.perf_counter()
     toks, cache = greedy_decode(model, params, cache, first,
                                 args.prompt_len, args.gen, decode_step=step)

@@ -108,9 +108,16 @@ def estimate_memory(
     train: TrainConfig,
     hw: HardwareSpec,
     dtype: str = "bfloat16",
+    cache_pool_arenas: int = 1,
 ) -> MemoryEstimate:
     """``dtype`` is the actual compute dtype (params + activations + grads +
-    KV cache); compile-time statistics follow it instead of assuming bf16."""
+    KV cache); compile-time statistics follow it instead of assuming bf16.
+
+    ``cache_pool_arenas`` sizes the decode KV-cache statistic for a
+    row-addressable cache pool (``repro.runtime.kv_cache``) provisioned for
+    that many concurrent bucket arenas; 1 is the single-blob behaviour. The
+    pool's live bytes at runtime are checked against this compile-time
+    statistic by the dynamic-recompilation predicate."""
     nb = dtype_bytes(dtype)
     est = MemoryEstimate(budget=hw.hbm_bytes)
     p = model.param_count()
@@ -136,7 +143,8 @@ def estimate_memory(
     elif shape.kind == "prefill":
         est.per_device["activations"] = _prefill_activation_bytes(model, shape, plan, dp, mp, nb)
     else:  # decode
-        est.per_device["kv_cache"] = _cache_bytes(model, shape, plan, mesh, nb)
+        est.per_device["kv_cache"] = (max(1, cache_pool_arenas)
+                                      * _cache_bytes(model, shape, plan, mesh, nb))
         est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp, nb)
 
     est.per_device["workspace"] = 0.08 * sum(est.per_device.values())

@@ -177,6 +177,17 @@ def recompile_reasons(plan: ExecutionPlan, stats: RuntimeStats,
                 f"memory watermark {stats.watermark_bytes / mib:.2f}MiB exceeds "
                 f"estimate {plan.memory.total / mib:.2f}MiB by >{margin:.0%}"
             )
+    # KV-cache pool breach: the row-addressable pool's live bytes exceed the
+    # compile-time cache statistic the plan was sized for — same predicate
+    # shape as the watermark check, scoped to the cache tensor class.
+    if stats.cache_pool_bytes and plan.memory is not None:
+        kv_est = plan.memory.per_device.get("kv_cache", 0.0)
+        if kv_est > 0 and stats.cache_pool_bytes > kv_est * (1.0 + margin):
+            mib = 1024 ** 2
+            reasons.append(
+                f"kv-cache pool {stats.cache_pool_bytes / mib:.2f}MiB exceeds "
+                f"planned pool capacity {kv_est / mib:.2f}MiB by >{margin:.0%}"
+            )
     return tuple(reasons)
 
 

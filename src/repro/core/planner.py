@@ -35,9 +35,14 @@ LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
 
 
 class PlanCompiler:
-    def __init__(self, hw: HardwareSpec = TPU_V5E, headroom: float = 0.9):
+    def __init__(self, hw: HardwareSpec = TPU_V5E, headroom: float = 0.9,
+                 cache_pool_arenas: int = 1):
         self.hw = hw
         self.headroom = headroom
+        # decode statistics are sized for a KV-cache pool provisioned for
+        # this many concurrent bucket arenas (repro.runtime.kv_cache);
+        # 1 keeps the single-blob seed behaviour for dryruns/tests
+        self.cache_pool_arenas = cache_pool_arenas
 
     # ------------------------------------------------------------------
     def compile(
@@ -65,7 +70,8 @@ class PlanCompiler:
                 c for c in candidates if c.strategy.value == train.force_strategy
             ] or candidates
         for cand in candidates:
-            mem = estimate_memory(model, shape, mesh, cand, train, self.hw, dtype)
+            mem = estimate_memory(model, shape, mesh, cand, train, self.hw, dtype,
+                                  cache_pool_arenas=self.cache_pool_arenas)
             if mem_scale != 1.0:
                 mem = mem.scaled(mem_scale)
             if mem.fits(self.headroom):
@@ -78,7 +84,9 @@ class PlanCompiler:
                 notes=candidates[-1].notes
                 + ("WARNING: worst-case estimate exceeds HBM budget",)
             )
-            chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw, dtype)
+            chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw,
+                                         dtype,
+                                         cache_pool_arenas=self.cache_pool_arenas)
             if mem_scale != 1.0:
                 chosen_mem = chosen_mem.scaled(mem_scale)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw)
@@ -128,6 +136,14 @@ class PlanCompiler:
                 and 0 < plan.memory.total < stats.watermark_bytes):
             plan.memory = plan.memory.scaled(
                 stats.watermark_bytes / plan.memory.total)
+        # KV-cache pool breach: the pool outgrew the compile-time cache
+        # statistic — correct it to cover the observation so an identical
+        # pool occupancy does not re-trigger recompilation (same
+        # converge-after-one contract as the watermark correction above).
+        if stats.cache_pool_bytes and plan.memory is not None:
+            kv_est = plan.memory.per_device.get("kv_cache", 0.0)
+            if 0 < kv_est < stats.cache_pool_bytes:
+                plan.memory.per_device["kv_cache"] = float(stats.cache_pool_bytes)
         plan.config = plan.config.replace(
             notes=plan.config.notes
             + (f"dynamic recompilation: runtime stats correction x{scale:.2f}",)

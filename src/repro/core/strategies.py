@@ -75,10 +75,16 @@ class RuntimeStats:
     observed while executing it, and re-optimizes when they diverge. This
     is the runtime side: the actual request shape and the measured live-
     bytes watermark, fed back into :meth:`PlanCompiler.recompile`.
+
+    ``cache_pool_bytes`` is the live size of the row-addressable KV-cache
+    pool (``repro.runtime.kv_cache``) at observation time; a pool that has
+    outgrown the plan's compile-time cache statistics triggers dynamic
+    recompilation exactly like an activation-watermark breach.
     """
 
     shape: InputShape
     watermark_bytes: float = 0.0
+    cache_pool_bytes: float = 0.0
 
 
 @dataclass

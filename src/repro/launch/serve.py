@@ -18,11 +18,17 @@ hit cached compiled plans, and estimate breaches trigger recompilation:
         --shapes 2x100,1x40,4x60 --no-cache
 
 Continuous-batching scheduler mode — pending requests coalesce into shared
-shape buckets (one decode batch serves many requests), prefill plans come
-from the same cache, and arrivals are simulated at ``--arrival-rate``:
+shape buckets (one decode batch serves many requests), prefill populates
+each request's KV-cache pool rows (prefill→decode handoff), and arrivals
+are simulated at ``--arrival-rate``. ``--join-mid-decode`` (default on)
+additionally absorbs newly arrived same-bucket requests into free rows of
+in-flight groups between decode steps — token-level continuous batching:
 
     PYTHONPATH=src python -m repro.launch.serve --scheduler \
         --requests 24 --arrival-rate 20 --slo-ms 2000
+    # admission-only coalescing (A/B baseline), bounded cache pool:
+    PYTHONPATH=src python -m repro.launch.serve --scheduler \
+        --no-join-mid-decode --pool-max-arenas 2
 """
 
 from __future__ import annotations
@@ -67,7 +73,10 @@ def _build_server(args) -> PlanServer:
     # A/B runs (same model init, same recompilation predicate)
     return PlanServer(cfg, dtype=dtype, enable_cache=not args.no_cache,
                       capacity=args.cache_capacity, seed=args.seed,
-                      recompile_margin=args.recompile_margin)
+                      recompile_margin=args.recompile_margin,
+                      prefill=getattr(args, "prefill", False),
+                      pool_arenas=args.pool_arenas,
+                      pool_max_arenas=args.pool_max_arenas)
 
 
 def _request_mix(args):
@@ -98,15 +107,19 @@ def serve_scheduled(args) -> None:
     srv = _build_server(args)
     mix, reqs = _request_mix(args)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=args.max_group_batch,
-                                        slo_ms=args.slo_ms)
+                                        slo_ms=args.slo_ms,
+                                        join_mid_decode=args.join_mid_decode)
     arrivals = simulate_arrivals(reqs, args.arrival_rate, seed=args.seed)
     print(f"# scheduler: {args.requests} requests over shape mix {mix} "
           f"arrival_rate={args.arrival_rate}/s "
-          f"max_group_batch={args.max_group_batch}")
+          f"max_group_batch={args.max_group_batch} "
+          f"join_mid_decode={args.join_mid_decode}")
     for rec in sched.run(arrivals):
+        joined = (f" joined@{rec['joined_at_step']}"
+                  if rec["joined_at_step"] else "")
         print(f"req[{rec['rid']:03d}] batch={rec['batch']} "
               f"ctx={rec['context']} -> bucket={rec['bucket']} "
-              f"group={rec['group_size']} "
+              f"group={rec['group_size']}{joined} "
               f"queue={rec['queue_s'] * 1e3:7.1f}ms "
               f"exec={rec['exec_s'] * 1e3:7.1f}ms")
     print(sched.summary())
@@ -157,7 +170,18 @@ def main():
                          "(default: built-in 5-shape mix)")
     ap.add_argument("--no-cache", action="store_true",
                     help="stream mode: disable the plan cache (A/B baseline)")
+    ap.add_argument("--prefill", action="store_true",
+                    help="stream mode: full prefill+decode requests with "
+                         "KV-cache handoff (scheduler mode always prefills)")
     ap.add_argument("--cache-capacity", type=int, default=16)
+    ap.add_argument("--pool-arenas", type=int, default=4,
+                    help="KV-cache pool arenas the compile-time memory "
+                         "statistics are provisioned for (pool growth past "
+                         "them triggers dynamic recompilation)")
+    ap.add_argument("--pool-max-arenas", type=int, default=0,
+                    help="hard KV-cache pool budget in arenas (0 = "
+                         "unbounded); a full pool queues new groups while "
+                         "mid-decode joins keep absorbing work")
     ap.add_argument("--recompile-margin", type=float, default=0.25,
                     help="dynamic-recompilation watermark margin")
     ap.add_argument("--seed", type=int, default=0,
@@ -171,6 +195,13 @@ def main():
                          "(0 = closed burst, everything arrives at t=0)")
     ap.add_argument("--max-group-batch", type=int, default=8,
                     help="scheduler mode: batch-row capacity per group")
+    ap.add_argument("--join-mid-decode", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="scheduler mode: absorb newly arrived same-bucket "
+                         "requests into free cache-pool rows of in-flight "
+                         "groups between decode steps (token-level "
+                         "continuous batching); --no-join-mid-decode "
+                         "falls back to admission-time coalescing only")
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="scheduler mode: per-request latency objective "
                          "(0 disables SLO accounting)")

@@ -202,23 +202,24 @@ def decode_attention(
     q: jnp.ndarray,        # (B, 1, Hq, D)
     k_cache: jnp.ndarray,  # (B, Sc, Hkv, D)
     v_cache: jnp.ndarray,
-    pos: jnp.ndarray,      # scalar int32: absolute position of the new token
-    *,
+    pos: jnp.ndarray,      # int32: absolute position of the new token —
+    *,                     #   scalar (whole batch) or (B,) per-row vector
     window: int = 0,       # rotating cache iff window > 0 (Sc == window)
 ) -> jnp.ndarray:
     b, _, h, d = q.shape
     sc = k_cache.shape[1]
     qf = (q.astype(jnp.float32) * (d ** -0.5))[:, 0]
     s = jnp.einsum("bhd,bkhd->bhk", qf, k_cache.astype(jnp.float32))
-    slots = jnp.arange(sc)
+    slots = jnp.arange(sc)[None, :]          # (1, Sc)
+    pb = jnp.reshape(pos, (-1, 1))           # (B, 1) or (1, 1) — broadcasts
     if window:
         # rotating cache: slot i holds absolute position
         # p_i = pos - ((pos - i) mod Sc); valid iff 0 <= p_i <= pos
-        p_i = pos - jnp.mod(pos - slots, sc)
-        valid = (p_i >= 0) & (p_i <= pos)
+        p_i = pb - jnp.mod(pb - slots, sc)
+        valid = (p_i >= 0) & (p_i <= pb)
     else:
-        valid = slots <= pos
-    s = jnp.where(valid[None, None, :], s, -1e30)
+        valid = slots <= pb
+    s = jnp.where(valid[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
     return o[:, None].astype(q.dtype)
@@ -229,7 +230,19 @@ def cache_write(
     k_new: jnp.ndarray, v_new: jnp.ndarray,  # (B, 1, Hkv, D)
     pos: jnp.ndarray, *, window: int = 0,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``pos`` scalar: one shared write slot (dynamic-update-slice). ``pos``
+    (B,) vector: rows at different generation depths write their own slots
+    (scatter; out-of-capacity rows drop their write — their decode mask
+    never exposes those slots either)."""
     sc = k_cache.shape[1]
+    if pos.ndim:
+        slot = jnp.mod(pos, sc) if window else pos
+        rows = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[rows, slot].set(
+            k_new[:, 0].astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[rows, slot].set(
+            v_new[:, 0].astype(v_cache.dtype), mode="drop")
+        return k_cache, v_cache
     slot = jnp.mod(pos, sc) if window else pos
     k_cache = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
     v_cache = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)

@@ -73,12 +73,16 @@ def attn_block_params(cfg: ModelConfig, cross: bool = False) -> Dict:
 
 def _qkv(cfg, p, x, positions, prefix="", ctx: ShardCtx = NULL_CTX,
          expand: bool = True):
+    """Returns ``(q, k, v, (k_kv, v_kv))`` — the last pair is the rope'd
+    K/V in kv-head form (pre-GQA-expansion, pre-constraint): exactly what a
+    decode cache row stores, so the prefill path can hand its K/V off."""
     q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"])
     if positions is not None:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
+    kv_form = (k, v)
     if expand and cfg.q_per_kv > 1:
         # GQA: expand K/V to the full head count. Under tensor parallelism
         # the expanded heads shard over "model", so each chip materializes
@@ -100,12 +104,12 @@ def _qkv(cfg, p, x, positions, prefix="", ctx: ShardCtx = NULL_CTX,
         q = ctx.constrain_seq_model(q)
         k = ctx.constrain(k, ("batch", None, None, None))
         v = ctx.constrain(v, ("batch", None, None, None))
-        return q, k, v
+        return q, k, v, kv_form
     kvspec = ("batch", None, None, None) if cp else qspec
     q = ctx.constrain(q, qspec)
     k = ctx.constrain(k, kvspec)
     v = ctx.constrain(v, kvspec)
-    return q, k, v
+    return q, k, v, kv_form
 
 
 def _heads_shardable(cfg, ctx: ShardCtx) -> bool:
@@ -133,13 +137,15 @@ def _ffn(cfg, p, x, ctx: ShardCtx):
 def attn_block_apply(
     cfg: ModelConfig, p: Dict, x: jnp.ndarray, positions: jnp.ndarray,
     *, causal: bool = True, window: int = 0, ctx: ShardCtx = NULL_CTX,
-    enc_out: Optional[jnp.ndarray] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (x_out, aux_loss)."""
+    enc_out: Optional[jnp.ndarray] = None, want_kv: bool = False,
+) -> Tuple:
+    """Returns (x_out, aux_loss), or with ``want_kv`` the 3-tuple
+    (x_out, aux_loss, {"k", "v"}) — K/V in kv-head cache-row form
+    ``(B, S, Kv, Dh)`` for the prefill→decode handoff."""
     h = rms_norm(x, p["ln1"])
     if not _sp_attention(cfg, ctx):
         h = ctx.seq_gather(h)
-    q, k, v = _qkv(cfg, p, h, positions, ctx=ctx)
+    q, k, v, (kr, vr) = _qkv(cfg, p, h, positions, ctx=ctx)
     o = ATT.attention(q, k, v, causal=causal, window=window)
     if _sp_attention(cfg, ctx) and not (ctx.plan and ctx.plan.seq_axes):
         o = ctx.constrain_seq_model(o)
@@ -158,7 +164,10 @@ def attn_block_apply(
         x = x + jnp.einsum("bshk,hkd->bsd", ox, p["xwo"])
     h = ctx.seq_gather(rms_norm(x, p["ln2"]))
     f, aux = _ffn(cfg, p, h, ctx)
-    return x + ctx.ckpt_constrain(f), aux
+    out = x + ctx.ckpt_constrain(f)
+    if want_kv:
+        return out, aux, {"k": kr, "v": vr}
+    return out, aux
 
 
 def attn_block_decode(
@@ -167,10 +176,12 @@ def attn_block_decode(
     enc_out_kv: Optional[Tuple] = None,
 ) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, 1, D). cache: {"k": (B, Sc, Kv, Dh), "v": ...} (kv-head form;
-    expansion to full heads happens at the attention einsum)."""
+    expansion to full heads happens at the attention einsum). ``pos`` is a
+    scalar (whole batch at one depth) or a (B,) vector (rows at different
+    generation depths — the row-addressable cache-pool decode shape)."""
     h = rms_norm(x, p["ln1"])
-    q, k, v = _qkv(cfg, p, h, pos[None] if pos.ndim == 0 else pos,
-                   ctx=ctx, expand=False)
+    rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
+    q, k, v, _ = _qkv(cfg, p, h, rope_pos, ctx=ctx, expand=False)
     kc, vc = ATT.cache_write(cache["k"], cache["v"], k, v, pos, window=window)
     ke, ve = kc, vc
     if cfg.q_per_kv > 1:
@@ -377,23 +388,63 @@ def _ssd_pre(cfg, p, h):
     return z, xin, bm, cm, dt
 
 
+def _conv_tail(x_raw: jnp.ndarray, wd: int, lengths: jnp.ndarray) -> jnp.ndarray:
+    """Decode conv state after a prefill of per-row length T: the last
+    ``wd - 1`` *raw pre-conv* inputs before position T (zero-padded below
+    position 0). x_raw: (B, S, C); lengths: (B,); returns (B, wd-1, C)."""
+    b, s, c = x_raw.shape
+    pad = jnp.zeros((b, wd - 1, c), x_raw.dtype)
+    xp = jnp.concatenate([pad, x_raw], axis=1)      # index j ↔ position j-(wd-1)
+    idx = lengths[:, None] + jnp.arange(wd - 1)[None, :]    # positions T-wd+1..T-1
+    return jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+
+
 def ssd_block_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
-                    positions=None, *, ctx: ShardCtx = NULL_CTX, **_):
+                    positions=None, *, ctx: ShardCtx = NULL_CTX,
+                    lengths: Optional[jnp.ndarray] = None,
+                    want_cache: bool = False, **_):
+    """Returns (x_out, aux), or with ``want_cache`` the 3-tuple
+    (x_out, aux, cache) where cache is the decode state after a per-row
+    prompt of ``lengths`` tokens: {"state", "conv_x", "conv_b", "conv_c"}
+    exactly as :func:`ssd_block_decode` consumes them."""
     from repro.kernels import ops as kops
 
     b, s, d = x.shape
     h = ctx.seq_gather(rms_norm(x, p["ln"]))
-    z, xin, bm, cm, dt = _ssd_pre(cfg, p, h)
-    xin = jax.nn.silu(causal_conv1d(xin, p["conv_x"]).astype(jnp.float32)).astype(x.dtype)
-    bm = jax.nn.silu(causal_conv1d(bm, p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
-    cm = jax.nn.silu(causal_conv1d(cm, p["conv_c"]).astype(jnp.float32)).astype(x.dtype)
+    z, xin_raw, bm_raw, cm_raw, dt = _ssd_pre(cfg, p, h)
+    xin_f = jax.nn.silu(causal_conv1d(xin_raw, p["conv_x"]).astype(jnp.float32))
+    bm_f = jax.nn.silu(causal_conv1d(bm_raw, p["conv_b"]).astype(jnp.float32))
+    cm_f = jax.nn.silu(causal_conv1d(cm_raw, p["conv_c"]).astype(jnp.float32))
+    xin, bm, cm = (t.astype(x.dtype) for t in (xin_f, bm_f, cm_f))
     nh, hd = cfg.ssm_num_heads, cfg.ssm_head_dim
     xh = xin.reshape(b, s, nh, hd)
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
     y = kops.ssd(xh, dt, a, bm, cm, p["d_skip"].astype(jnp.float32))
     y = y.reshape(b, s, cfg.d_inner)
     y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["gate_ln"])
-    return x + ctx.ckpt_constrain(jnp.einsum("bse,ed->bsd", y, p["w_out"])), 0.0
+    out = x + ctx.ckpt_constrain(jnp.einsum("bse,ed->bsd", y, p["w_out"]))
+    if not want_cache:
+        return out, 0.0
+    # Final SSM state at per-row prompt length T, in closed form:
+    #   state_T = Σ_{t<T} exp(Σ_{u=t+1..T-1} dt_u·a) · dt_t · x_t ⊗ b_t
+    # via log-space prefix sums — no (B,S,H,P,N) per-position states held.
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    xh_f = xin_f.reshape(b, s, nh, hd)
+    logdecay = dt * a[None, None, :]                       # (B,S,H), <= 0
+    cum = jnp.cumsum(logdecay, axis=1)
+    cum_t = jnp.take_along_axis(cum, (lengths - 1)[:, None, None], axis=1)
+    tmask = (jnp.arange(s)[None, :] < lengths[:, None])
+    w = jnp.exp(jnp.minimum(cum_t - cum, 0.0)) * tmask[..., None]
+    state = jnp.einsum("bsh,bshp,bsn->bhpn", w * dt, xh_f, bm_f)
+    wc = cfg.ssm_conv_width
+    cache = {
+        "state": state,
+        "conv_x": _conv_tail(xin_raw, wc, lengths),
+        "conv_b": _conv_tail(bm_raw, wc, lengths),
+        "conv_c": _conv_tail(cm_raw, wc, lengths),
+    }
+    return out, 0.0, cache
 
 
 def ssd_block_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray, cache: Dict,
@@ -471,11 +522,17 @@ def _lru_gates(p, xb):
 
 
 def rglru_block_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
-                      positions=None, *, ctx: ShardCtx = NULL_CTX, **_):
+                      positions=None, *, ctx: ShardCtx = NULL_CTX,
+                      lengths: Optional[jnp.ndarray] = None,
+                      want_cache: bool = False, **_):
+    """Returns (x_out, aux), or with ``want_cache`` the 3-tuple
+    (x_out, aux, cache): {"h", "conv"} — the recurrent state after a
+    per-row prompt of ``lengths`` tokens, as :func:`rglru_block_decode`
+    consumes it (handoff)."""
     h = ctx.seq_gather(rms_norm(x, p["ln"]))
-    xb = jnp.einsum("bsd,dw->bsw", h, p["wx"])
+    xb_raw = jnp.einsum("bsd,dw->bsw", h, p["wx"])
     yb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["wy"]).astype(jnp.float32))
-    xb = causal_conv1d(xb, p["conv"])
+    xb = causal_conv1d(xb_raw, p["conv"])
     a, gate = _lru_gates(p, xb)
     bt = gate * xb.astype(jnp.float32)
     # h_t = a_t * h_{t-1} + b_t  — associative scan (TPU-parallel recurrence)
@@ -483,7 +540,15 @@ def rglru_block_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
         return (rhs[0] * lhs[0], rhs[0] * lhs[1] + rhs[1])
     _, hseq = lax.associative_scan(combine, (a, bt), axis=1)
     y = (hseq * yb).astype(x.dtype)
-    return x + ctx.ckpt_constrain(jnp.einsum("bsw,wd->bsd", y, p["w_out"])), 0.0
+    out = x + ctx.ckpt_constrain(jnp.einsum("bsw,wd->bsd", y, p["w_out"]))
+    if not want_cache:
+        return out, 0.0
+    if lengths is None:
+        lengths = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    h_state = jnp.take_along_axis(hseq, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    wd = p["conv"].shape[0]
+    cache = {"h": h_state, "conv": _conv_tail(xb_raw, wd, lengths)}
+    return out, 0.0, cache
 
 
 def rglru_block_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray, cache: Dict,

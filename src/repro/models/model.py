@@ -221,6 +221,17 @@ class Model:
     # ------------------------------------------------------------------
     # serving: cache construction + one-token decode
     # ------------------------------------------------------------------
+    def attn_cache_len(self, seq_len: int) -> int:
+        """Attention cache slots for a ``seq_len`` context: the window for
+        sliding-window archs, min(seq, serve_window) beyond the long-context
+        threshold (DESIGN §5), the full context otherwise."""
+        cfg = self.cfg
+        if cfg.window_size:
+            return min(seq_len, cfg.window_size)
+        if seq_len > 262_144 and cfg.serve_window:
+            return min(seq_len, cfg.serve_window)
+        return seq_len
+
     def cache_entries(self, batch: int, seq_len: int) -> Dict[str, Tuple]:
         """{name: (shape, axes, dtype)} for the decode cache. ``seq_len`` is
         the max context; full-attention caches hold min(seq, serve_window)
@@ -229,25 +240,18 @@ class Model:
         ent: Dict[str, Tuple] = {}
         pat = cfg.layer_pattern()
 
-        def attn_seq():
-            if cfg.window_size:
-                return min(seq_len, cfg.window_size)
-            if seq_len > 262_144 and cfg.serve_window:
-                return min(seq_len, cfg.serve_window)
-            return seq_len
-
         if cfg.family == "hybrid":
             n_r, n_a = pat.count("r"), pat.count("a")
             for name, (shape, axes, dt) in B.rglru_cache_spec(cfg, batch, self.dtype).items():
                 ent[f"r.{name}"] = ((n_r, *shape), ("layers", *axes), dt)
-            sc = attn_seq()
+            sc = self.attn_cache_len(seq_len)
             for name, (shape, axes) in B.attn_cache_spec(cfg, batch, sc, self.dtype).items():
                 ent[f"a.{name}"] = ((n_a, *shape), ("layers", *axes), self.dtype)
         elif cfg.family == "ssm":
             for name, (shape, axes, dt) in B.ssd_cache_spec(cfg, batch, self.dtype).items():
                 ent[f"l.{name}"] = ((cfg.num_layers, *shape), ("layers", *axes), dt)
         else:
-            sc = attn_seq()
+            sc = self.attn_cache_len(seq_len)
             n = cfg.num_layers
             pfx = "d." if cfg.is_encdec else "l."
             for name, (shape, axes) in B.attn_cache_spec(cfg, batch, sc, self.dtype).items():
@@ -280,10 +284,14 @@ class Model:
     def decode_step(self, params, cache: Dict, tokens: jnp.ndarray,
                     pos: jnp.ndarray, ctx: ShardCtx = NULL_CTX,
                     window_override: Optional[int] = None):
-        """tokens: (B, 1); pos: scalar int32. Returns (logits, new_cache).
-        ``window_override``: force rotating-cache semantics with this window
-        (otherwise inferred: arch window or long-context serve_window)."""
+        """tokens: (B, 1); pos: scalar int32 *or* a (B,) per-row position
+        vector — rows of one batch may sit at different generation depths
+        (the row-addressable cache-pool decode shape). Returns
+        (logits, new_cache). ``window_override``: force rotating-cache
+        semantics with this window (otherwise inferred: arch window or
+        long-context serve_window)."""
         cfg = self.cfg
+        pos = jnp.asarray(pos, jnp.int32)
         x = self._embed(params, tokens)
         window = (window_override if window_override is not None
                   else self.decode_window(cache_seq(cache)))
@@ -375,13 +383,125 @@ class Model:
         return {"x.k": xk.astype(self.dtype), "x.v": xv.astype(self.dtype)}
 
     # ------------------------------------------------------------------
-    def prefill(self, params, tokens, extra=None, ctx: ShardCtx = NULL_CTX):
-        """Forward pass producing last-position logits (batch scoring /
-        prefill shape). Cache population for decode is exercised separately
-        via decode_step; the prefill *shape* lowers the full forward."""
-        logits, _ = self.apply(params, tokens, extra=extra, ctx=ctx,
-                               last_only=True)
-        return logits[:, -1]
+    # prefill: full prompt pass that *populates* the decode cache
+    # ------------------------------------------------------------------
+    @property
+    def supports_handoff(self) -> bool:
+        """Whether prefill can hand a populated cache to decode. Decoder-
+        only text stacks (dense / moe / ssm / hybrid) do; enc-dec and
+        modality-prefix frontends still start decode from a zero cache."""
+        return not self.cfg.is_encdec and self.cfg.frontend == "none"
+
+    def prefill(self, params, tokens, extra=None, ctx: ShardCtx = NULL_CTX,
+                *, lengths: Optional[jnp.ndarray] = None,
+                cache_len: Optional[int] = None):
+        """Prompt pass returning ``(last_logits, cache)``.
+
+        ``last_logits`` is each row's next-token distribution at its own
+        final prompt position (``(B, vocab)``); ``cache`` is a *populated*
+        decode cache — the same pytree as :meth:`init_cache` at
+        ``(batch, cache_len)`` — so decode continues from the prompt instead
+        of restarting on zeros (prefill→decode handoff). ``lengths`` gives
+        the per-row prompt length inside the padded ``tokens`` (default: the
+        full width); ``cache_len`` sizes the cache context (default: the
+        tokens width). Families without handoff return ``cache=None``.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape[0], tokens.shape[1]
+        if not self.supports_handoff:
+            logits, _ = self.apply(params, tokens, extra=extra, ctx=ctx,
+                                   last_only=True)
+            return logits[:, -1], None
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        cache_len = int(cache_len) if cache_len else s
+        x = self._embed(params, tokens)
+        positions = jnp.arange(s)
+        if cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, positions, lengths, ctx)
+        else:
+            x, cache = self._stack_prefill(params, x, positions, lengths, ctx)
+        x = rms_norm(x, params["final_ln"])
+        xl = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+        logits = self._logits(params, xl)[:, 0]
+        # attention K/V land in their decode-slot layout (rotating-window
+        # aware); recurrent state entries are already in decode form
+        sc = self.attn_cache_len(cache_len)
+        cache = {k: (gather_cache_slots(v, lengths, sc)
+                     if k.endswith(".k") or k.endswith(".v") else v)
+                 for k, v in cache.items()}
+        # exact init_cache pytree contract: hybrids whose reduced pattern
+        # drops a block kind still carry that kind's zero-layer entries
+        for k, (shape, _axes, dt) in self.cache_entries(b, cache_len).items():
+            if k not in cache:
+                cache[k] = jnp.zeros(shape, dt)
+        return logits, cache
+
+    def _stack_prefill(self, params, x, positions, lengths, ctx):
+        cfg = self.cfg
+        stacked = _subtree(params, "l.")
+        if cfg.family == "ssm":
+            def layer_fn(carry, lp):
+                h, _, c = B.ssd_block_apply(cfg, lp, carry, positions,
+                                            ctx=ctx, lengths=lengths,
+                                            want_cache=True)
+                return ctx.ckpt_constrain(h), c
+        else:
+            window = cfg.window_size
+
+            def layer_fn(carry, lp):
+                h, _, c = B.attn_block_apply(cfg, lp, carry, positions,
+                                             causal=True, window=window,
+                                             ctx=ctx, want_kv=True)
+                return ctx.ckpt_constrain(h), c
+        x, ccache = lax.scan(layer_fn, x, stacked)
+        return x, {f"l.{k}": v for k, v in ccache.items()}
+
+    def _hybrid_prefill(self, params, x, positions, lengths, ctx):
+        cfg = self.cfg
+        rp, ap = _subtree(params, "r."), _subtree(params, "a.")
+        ri = ai = 0
+        rcs, acs = [], []
+        for kind in cfg.layer_pattern():
+            if kind == "r":
+                lp = jax.tree.map(lambda v, i=ri: v[i], rp)
+                x, _, c = B.rglru_block_apply(cfg, lp, x, positions, ctx=ctx,
+                                              lengths=lengths, want_cache=True)
+                rcs.append(c)
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda v, i=ai: v[i], ap)
+                x, _, c = B.attn_block_apply(cfg, lp, x, positions,
+                                             causal=True,
+                                             window=cfg.window_size, ctx=ctx,
+                                             want_kv=True)
+                acs.append(c)
+                ai += 1
+            x = ctx.ckpt_constrain(x)
+        cache = {}
+        for prefix, layer_caches in (("r.", rcs), ("a.", acs)):
+            for k in (layer_caches[0] if layer_caches else ()):
+                cache[prefix + k] = jnp.stack([c[k] for c in layer_caches])
+        return x, cache
+
+
+def gather_cache_slots(kv: jnp.ndarray, lengths: jnp.ndarray,
+                       sc: int) -> jnp.ndarray:
+    """Map full-sequence K/V ``(L, B, S, Kv, Dh)`` onto decode-cache slots
+    ``(L, B, sc, Kv, Dh)``: slot ``i`` of row ``r`` holds the latest prompt
+    position ``p ≡ i (mod sc)`` with ``p < lengths[r]`` — the rotating-
+    window layout :func:`attention.decode_attention` masks against (the
+    identity layout is the ``sc >= S`` special case). Slots with no valid
+    position are zeroed; the decode mask never exposes them."""
+    s = kv.shape[2]
+    last = lengths - 1
+    i = jnp.arange(sc)[None, :]
+    p = last[:, None] - jnp.mod(last[:, None] - i, sc)          # (B, sc)
+    valid = (p >= 0)[None, :, :, None, None]
+    pc = jnp.clip(p, 0, s - 1)[None, :, :, None, None]
+    out = jnp.take_along_axis(kv, pc, axis=2)
+    return jnp.where(valid, out, jnp.zeros((), kv.dtype))
 
 
 def cache_seq(cache: Dict) -> int:

@@ -7,10 +7,11 @@ from repro.runtime.serve_loop import (PlanServer, ServeRequest,
 from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                      QueuedRequest, RequestQueue,
                                      simulate_arrivals)
+from repro.runtime.kv_cache import CacheArena, KVCachePool, PoolMetrics
 from repro.runtime.metrics import (LatencyStats, PlanCacheMetrics,
                                    SchedulerMetrics, StepTimer,
-                                   format_metrics, scheduler_summary,
-                                   serve_summary)
+                                   format_metrics, pool_summary,
+                                   scheduler_summary, serve_summary)
 
 __all__ = ["make_train_step", "init_opt_state", "opt_state_specs",
            "train_shardings", "batch_specs", "make_decode_step",
@@ -18,4 +19,5 @@ __all__ = ["make_train_step", "init_opt_state", "opt_state_specs",
            "ServeRequest", "ContinuousBatchingScheduler", "RequestQueue",
            "QueuedRequest", "simulate_arrivals", "StepTimer",
            "format_metrics", "LatencyStats", "PlanCacheMetrics",
-           "SchedulerMetrics", "scheduler_summary", "serve_summary"]
+           "SchedulerMetrics", "scheduler_summary", "serve_summary",
+           "KVCachePool", "CacheArena", "PoolMetrics", "pool_summary"]

@@ -1,0 +1,260 @@
+"""Row-addressable KV-cache pool for the serving path.
+
+The decode KV cache is the serving path's single largest memory object, yet
+the seed treated it as a per-group throwaway blob: every group called
+``model.init_cache`` itself, prefill state was discarded, and the planner
+never saw the bytes. This module gives the cache a single owner:
+
+- :class:`CacheArena` — one bucket-shaped cache pytree (exactly what
+  ``model.init_cache(batch_bucket, seq_bucket)`` builds) whose *batch rows*
+  are individually leasable. Rows at different generation depths coexist in
+  one arena because the decode step takes a per-row position vector.
+- :class:`KVCachePool` — owns every arena: leases them to request groups,
+  recycles fully-freed arenas (no reallocation), scatters prefill-produced
+  cache rows into leased arenas (the prefill→decode handoff write), and
+  accounts live bytes for the planner. A leased arena's free rows are where
+  the scheduler lands mid-decode joins.
+
+The pool's live bytes feed :class:`~repro.core.strategies.RuntimeStats`
+(``cache_pool_bytes``): when the pool outgrows the plan's compile-time
+cache statistic, dynamic recompilation triggers exactly like an
+activation-watermark breach (``core.plan_cache.recompile_reasons``).
+
+Budgets (``max_arenas`` / ``max_bytes``) bound the pool the way an HBM
+reservation would: ``acquire`` refuses new arenas beyond the budget (the
+scheduler then queues the group — or joins its requests into free rows of
+in-flight arenas instead, which is the whole point).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PoolMetrics:
+    """Pool-level accounting surfaced through ``scheduler_summary``."""
+
+    arenas_created: int = 0
+    arenas_reused: int = 0      # leases served from the free pool
+    arenas_denied: int = 0      # acquire refused by budget
+    arenas_evicted: int = 0     # free arenas dropped (LRU cap / budget)
+    rows_leased: int = 0
+    rows_reused: int = 0        # leased rows whose arena had a prior tenant
+    handoff_writes: int = 0     # prefill→decode row scatters
+    peak_bytes: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "arenas_created": self.arenas_created,
+            "arenas_reused": self.arenas_reused,
+            "arenas_denied": self.arenas_denied,
+            "arenas_evicted": self.arenas_evicted,
+            "rows_leased": self.rows_leased,
+            "rows_reused": self.rows_reused,
+            "handoff_writes": self.handoff_writes,
+            "peak_bytes": self.peak_bytes,
+        }
+
+
+class CacheArena:
+    """One bucket-shaped cache whose batch rows are individually leasable.
+
+    ``cache`` is the live pytree threaded through the jitted decode step;
+    the pool replaces it wholesale on handoff writes. Row bookkeeping
+    (which rows are leased) is host-side — the device arrays never need to
+    know, because free rows are simply masked out by their position vector
+    and their outputs ignored.
+    """
+
+    def __init__(self, batch: int, seq: int, cache: Dict[str, Any],
+                 nbytes: float):
+        self.batch = batch
+        self.seq = seq
+        self.cache = cache
+        self.nbytes = nbytes
+        self.generation = 0              # completed leases of this arena
+        self._free: List[int] = list(range(batch))
+
+    @property
+    def rows_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def rows_used(self) -> int:
+        return self.batch - len(self._free)
+
+    def alloc_rows(self, n: int) -> Optional[List[int]]:
+        """Lease ``n`` rows (lowest-index first); None if not enough free."""
+        if n > len(self._free):
+            return None
+        self._free.sort()
+        rows, self._free = self._free[:n], self._free[n:]
+        return rows
+
+    def free_rows(self, rows: Sequence[int]) -> None:
+        for r in rows:
+            if r in self._free:
+                raise ValueError(f"row {r} double-freed")
+            self._free.append(r)
+
+
+class KVCachePool:
+    """Single owner of decode-cache construction for a serving session.
+
+    ``max_arenas`` / ``max_bytes`` (0 = unbounded) cap the pool;
+    ``acquire(..., force=True)`` overrides the cap so a scheduler with no
+    in-flight work can always make progress. Fully-freed arenas are kept
+    for recycling up to ``max_free`` buckets (LRU-evicted beyond that, and
+    evicted early whenever their bytes stand between a new lease and the
+    budget) — retired shape buckets cannot pin HBM forever.
+    """
+
+    def __init__(self, model, *, max_arenas: int = 0, max_bytes: float = 0.0,
+                 max_free: int = 4):
+        self.model = model
+        self.max_arenas = max_arenas
+        self.max_bytes = max_bytes
+        self.max_free = max(1, max_free)
+        self.metrics = PoolMetrics()
+        self._leased: List[CacheArena] = []
+        # LRU order: least-recently released first (eviction order)
+        self._pooled: List[CacheArena] = []
+
+    # -- sizing ------------------------------------------------------------
+    def arena_bytes(self, batch: int, seq: int) -> float:
+        """Exact bytes of one (batch, seq) arena, from the model's cache
+        entry specs (no array materialization)."""
+        total = 0.0
+        for shape, _axes, dt in self.model.cache_entries(batch, seq).values():
+            total += math.prod(shape) * np.dtype(dt).itemsize
+        return total
+
+    def live_bytes(self) -> float:
+        """Bytes currently leased to request groups."""
+        return sum(a.nbytes for a in self._leased)
+
+    def total_bytes(self) -> float:
+        """Leased plus pooled-free bytes (what the pool actually holds)."""
+        return self.live_bytes() + sum(a.nbytes for a in self._pooled)
+
+    @property
+    def arena_count(self) -> int:
+        return len(self._leased) + len(self._pooled)
+
+    def occupancy(self) -> float:
+        """Fraction of leased-arena rows holding live requests."""
+        total = sum(a.batch for a in self._leased)
+        used = sum(a.rows_used for a in self._leased)
+        return used / total if total else 0.0
+
+    # -- lease lifecycle ---------------------------------------------------
+    def _evict_free(self, count: int = 1) -> int:
+        """Drop up to ``count`` least-recently-released free arenas (their
+        device buffers go with them). Returns how many were evicted."""
+        n = min(count, len(self._pooled))
+        if n:
+            del self._pooled[:n]
+            self.metrics.arenas_evicted += n
+        return n
+
+    def _budget_blocks(self, nbytes: float) -> bool:
+        if self.max_arenas and self.arena_count >= self.max_arenas:
+            return True
+        if self.max_bytes and self.total_bytes() + nbytes > self.max_bytes:
+            return True
+        return False
+
+    def can_acquire(self, batch: int, seq: int) -> bool:
+        if any((a.batch, a.seq) == (batch, seq) for a in self._pooled):
+            return True
+        nbytes = self.arena_bytes(batch, seq)
+        if not self._budget_blocks(nbytes):
+            return True
+        # free arenas of other buckets are evictable — only *leased* memory
+        # can genuinely refuse a lease
+        if self.max_arenas and len(self._leased) >= self.max_arenas:
+            return False
+        if self.max_bytes and self.live_bytes() + nbytes > self.max_bytes:
+            return False
+        return True
+
+    def acquire(self, batch: int, seq: int, *, zero: bool = False,
+                force: bool = False) -> Optional[CacheArena]:
+        """Lease a (batch, seq) arena. A fully-freed arena of the same
+        bucket is recycled without reallocation; otherwise a fresh one is
+        built — evicting idle free arenas first if they stand between the
+        lease and the budget (None when still refused and not ``force``).
+        ``zero``: clear recycled state, for tenants that decode from a zero
+        cache instead of overwriting their rows via a handoff write."""
+        arena = next((a for a in self._pooled
+                      if (a.batch, a.seq) == (batch, seq)), None)
+        if arena is not None:
+            self._pooled.remove(arena)
+            if zero:
+                arena.cache = jax.tree.map(jnp.zeros_like, arena.cache)
+            self.metrics.arenas_reused += 1
+        else:
+            nbytes = self.arena_bytes(batch, seq)
+            while self._budget_blocks(nbytes) and self._evict_free():
+                pass
+            if not force and self._budget_blocks(nbytes):
+                self.metrics.arenas_denied += 1
+                return None
+            arena = CacheArena(batch, seq, self.model.init_cache(batch, seq),
+                               nbytes)
+            self.metrics.arenas_created += 1
+        self._leased.append(arena)
+        self.metrics.peak_bytes = max(self.metrics.peak_bytes,
+                                      self.total_bytes())
+        return arena
+
+    def alloc_rows(self, arena: CacheArena, n: int) -> Optional[List[int]]:
+        rows = arena.alloc_rows(n)
+        if rows is not None:
+            self.metrics.rows_leased += n
+            if arena.generation:
+                self.metrics.rows_reused += n
+        return rows
+
+    def free_rows(self, arena: CacheArena, rows: Sequence[int]) -> None:
+        arena.free_rows(rows)
+
+    def release(self, arena: CacheArena) -> None:
+        """Return a leased arena to the free pool (rows need not be freed
+        individually first — a release ends the whole lease). The free pool
+        is LRU-capped at ``max_free`` arenas."""
+        self._leased.remove(arena)
+        arena._free = list(range(arena.batch))
+        arena.generation += 1
+        self._pooled.append(arena)
+        if len(self._pooled) > self.max_free:
+            self._evict_free(len(self._pooled) - self.max_free)
+
+    # -- the handoff write -------------------------------------------------
+    def write_rows(self, arena: CacheArena, rows: Sequence[int],
+                   cache: Dict[str, Any],
+                   src_rows: Optional[Sequence[int]] = None) -> None:
+        """Scatter ``cache`` rows (a prefill-populated cache at the same
+        bucket shape) into ``rows`` of the arena — the prefill→decode
+        handoff. Every cache leaf is layer-stacked ``(L, B, ...)``, so the
+        batch row is axis 1. Rows are fully overwritten, which is why
+        recycled arenas need no zeroing on this path."""
+        rows_a = jnp.asarray(list(rows), jnp.int32)
+        src_a = jnp.asarray(list(src_rows) if src_rows is not None
+                            else list(range(len(rows_a))), jnp.int32)
+        if set(cache) != set(arena.cache):
+            raise ValueError(
+                f"cache keys {sorted(cache)} != arena keys {sorted(arena.cache)}")
+        arena.cache = {
+            k: v.at[:, rows_a].set(
+                jnp.take(cache[k], src_a, axis=1).astype(v.dtype))
+            for k, v in arena.cache.items()
+        }
+        self.metrics.handoff_writes += 1

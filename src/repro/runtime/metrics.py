@@ -103,6 +103,8 @@ class SchedulerMetrics:
     completed: int = 0
     groups: int = 0
     coalesced_requests: int = 0     # requests that shared a group
+    joins: int = 0                  # requests absorbed mid-decode
+    join_rows: int = 0              # arena rows filled by mid-decode joins
     batch_slots_used: int = 0       # sum of member request batches
     batch_slots_total: int = 0      # sum of group batch-bucket capacities
     slo_met: int = 0
@@ -129,6 +131,15 @@ class SchedulerMetrics:
         self.batch_slots_used += sum(member_batches)
         self.batch_slots_total += bucket_batch
 
+    def observe_joins(self, member_batches) -> None:
+        """Mid-decode joins: requests absorbed into free rows of an
+        in-flight group. Tracked separately from ``bucket_fill`` — that
+        ratio stays an admission-time fill fraction (<= 1.0); joins reuse
+        slots the group already paid for, and their utilization shows up
+        in the pool occupancy line instead."""
+        self.joins += len(member_batches)
+        self.join_rows += sum(member_batches)
+
     def observe_request(self, queue_s: float, exec_s: float) -> None:
         self.completed += 1
         total = queue_s + exec_s
@@ -146,6 +157,7 @@ class SchedulerMetrics:
         line = (f"scheduler: admitted={self.admitted} "
                 f"completed={self.completed} groups={self.groups} "
                 f"coalesced={self.coalesced_requests} "
+                f"joins={self.joins} join_rows={self.join_rows} "
                 f"bucket_fill={self.bucket_fill:.2f}  |  "
                 f"queue p50={self.queue_latency.percentile(50) * ms:.1f}ms "
                 f"p95={self.queue_latency.percentile(95) * ms:.1f}ms  "
@@ -158,10 +170,27 @@ class SchedulerMetrics:
         return line
 
 
+def pool_summary(pool) -> str:
+    """One-line KV-cache pool report (``repro.runtime.kv_cache``): arena
+    churn, row reuse, live occupancy."""
+    m = pool.metrics
+    mib = 1024 ** 2
+    return (f"kv_pool: arenas={m.arenas_created} reused={m.arenas_reused} "
+            f"denied={m.arenas_denied} rows={m.rows_leased} "
+            f"rows_reused={m.rows_reused} handoffs={m.handoff_writes} "
+            f"occupancy={pool.occupancy():.2f} "
+            f"live={pool.live_bytes() / mib:.1f}MiB "
+            f"peak={m.peak_bytes / mib:.1f}MiB")
+
+
 def scheduler_summary(sched: "SchedulerMetrics", cache: PlanCacheMetrics,
-                      latency: LatencyStats) -> str:
-    """Two-line report: scheduler accounting over the plan-cache line."""
-    return sched.summary() + "\n" + serve_summary(cache, latency)
+                      latency: LatencyStats, pool=None) -> str:
+    """Scheduler accounting, optional KV-pool line, plan-cache line."""
+    lines = [sched.summary()]
+    if pool is not None:
+        lines.append(pool_summary(pool))
+    lines.append(serve_summary(cache, latency))
+    return "\n".join(lines)
 
 
 def format_metrics(rec: Dict) -> str:

@@ -1,27 +1,32 @@
 """Continuous-batching request scheduler on top of :class:`PlanServer`.
 
-The plan cache (PR 1) made steady-state serving cheap *per request*; this
-module makes it cheap *per token* by filling each shape bucket's batch
-dimension with real requests instead of padding every request up to its
-bucket alone. The scheduler is the serving-side analogue of SystemML's
-parfor batching argument (and BigDL/MMLSpark's coarse-grained batched
-scoring): one compiled plan, many concurrent requests.
+The plan cache (PR 1) made steady-state serving cheap *per request*; the
+coalescing scheduler (PR 2) made it cheap *per token* by filling each shape
+bucket's batch dimension with real requests. This revision makes batching
+*token-level*: groups decode over rows of a shared
+:class:`~repro.runtime.kv_cache.KVCachePool` arena, prefill hands each
+row's populated cache straight to decode (no zero-cache restart), and —
+with ``join_mid_decode`` — newly arrived same-bucket requests are absorbed
+into the free rows of **in-flight** groups between decode steps, each row
+carrying its own position (true continuous batching, the serving-side
+analogue of SystemML's parfor batching argument).
 
 Mechanics:
 
 - :class:`RequestQueue` admits :class:`ServeRequest`\\ s asynchronously
   (each stamped with an arrival time) and coalesces compatible pending
-  requests — same power-of-two context bucket — into a shared *group*
-  whose batch rows are the concatenation of the member requests.
-- :class:`ContinuousBatchingScheduler` interleaves prefill and decode:
-  each scheduler tick admits due arrivals, prefills at most one newly
-  coalesced group (drawing the prefill plan from the same
-  :class:`~repro.core.plan_cache.PlanCache` as decode, via
-  ``PlanServer.prefill_entry``), then advances every active group by one
-  decode step. New arrivals therefore start prefilling between the decode
-  steps of in-flight groups rather than behind them.
-- Per-request queueing vs. execution latency and SLO attainment are
-  tracked in :class:`~repro.runtime.metrics.SchedulerMetrics`.
+  requests — same power-of-two bucket over ``context + new_tokens`` so a
+  request's cache rows cover its whole decode — into a shared *group*.
+- :class:`ContinuousBatchingScheduler` per tick: admit due arrivals, join
+  pending requests into free rows of active groups (mid-decode, prefilled
+  at their own position), prefill at most one newly coalesced group (plans
+  from the shared :class:`~repro.core.plan_cache.PlanCache`), then advance
+  every active group by one decode step. Groups only form when the cache
+  pool can lease an arena — a budgeted pool backpressures new groups while
+  joins keep absorbing work into rows that are already resident.
+- Per-request queueing vs. execution latency, SLO attainment, join counts
+  and pool occupancy land in
+  :class:`~repro.runtime.metrics.SchedulerMetrics` / ``scheduler_summary``.
 
 Arrivals are simulated against a virtual clock that never runs slower
 than the real one: execution timing is measured, idle gaps between
@@ -39,7 +44,7 @@ import jax.numpy as jnp
 
 from repro.config import InputShape
 from repro.core.plan_cache import BucketPolicy, CacheEntry, bucket_pow2
-from repro.core.strategies import RuntimeStats
+from repro.runtime.kv_cache import CacheArena
 from repro.runtime.metrics import SchedulerMetrics
 from repro.runtime.serve_loop import PlanServer, ServeRequest
 
@@ -51,9 +56,8 @@ class QueuedRequest:
     rid: int
     req: ServeRequest
     arrival_s: float
-    start_s: float = -1.0        # group formed: prefill began
+    start_s: float = -1.0        # prefill began (group start or mid-decode join)
     finish_s: float = -1.0       # last requested token decoded
-    rows: Tuple[int, int] = (0, 0)  # this request's rows in its group batch
 
     @property
     def queue_s(self) -> float:
@@ -71,11 +75,15 @@ class QueuedRequest:
 class RequestQueue:
     """FIFO admission with bucket-aware coalescing.
 
+    Buckets are over ``context + new_tokens`` — the whole cache span a
+    request occupies — so a context landing exactly on a power-of-two
+    boundary still gets rows for every token it will generate.
+
     ``next_group`` is deliberately head-of-line fair: the *oldest* pending
-    request picks the context bucket, and only same-bucket requests may
-    join its group (in arrival order, until the group's batch capacity is
-    full). A popular bucket can therefore never starve an unpopular one —
-    it just rides along whenever its own head reaches the front.
+    request picks the bucket, and only same-bucket requests may join its
+    group (in arrival order, until the group's batch capacity is full). A
+    popular bucket can therefore never starve an unpopular one — it just
+    rides along whenever its own head reaches the front.
     """
 
     def __init__(self, policy: BucketPolicy = BucketPolicy(),
@@ -95,7 +103,7 @@ class RequestQueue:
         return tuple(self._pending)
 
     def seq_bucket(self, req: ServeRequest) -> int:
-        return bucket_pow2(req.context, self.policy.min_seq)
+        return bucket_pow2(req.context + req.new_tokens, self.policy.min_seq)
 
     def admit(self, req: ServeRequest, arrival_s: float = 0.0) -> QueuedRequest:
         qr = QueuedRequest(rid=self._next_rid, req=req, arrival_s=arrival_s)
@@ -128,6 +136,32 @@ class RequestQueue:
             self._pending.remove(qr)
         return group
 
+    def requeue_front(self, members: Sequence[QueuedRequest]) -> None:
+        """Return a popped group to the head of the line (pool refused the
+        arena lease); arrival order within the queue is preserved."""
+        self._pending = list(members) + self._pending
+
+    def take_joinable(self, seq_bucket: int, max_rows: int
+                      ) -> List[QueuedRequest]:
+        """Pop pending same-bucket requests that fit in ``max_rows`` free
+        arena rows, strictly FIFO *within the bucket*: scanning stops at
+        the first same-bucket request that does not fit, so later narrow
+        arrivals can never leapfrog a wide head of their own bucket forever
+        (the no-starvation guarantee extends to mid-decode joins)."""
+        taken: List[QueuedRequest] = []
+        room = max_rows
+        for qr in list(self._pending):
+            if room <= 0:
+                break
+            if self.seq_bucket(qr.req) != seq_bucket:
+                continue
+            if qr.req.batch > room:
+                break
+            taken.append(qr)
+            room -= qr.req.batch
+            self._pending.remove(qr)
+        return taken
+
 
 class _Clock:
     """Virtual clock: real elapsed time plus skipped idle gaps."""
@@ -144,22 +178,44 @@ class _Clock:
 
 
 @dataclass
-class _Group:
-    """One coalesced batch in flight: shared KV cache + decode plan."""
+class _Member:
+    """One request's tenancy inside a group: its arena rows, when it
+    joined (in decode steps), and its prefill-produced first token."""
 
-    members: List[QueuedRequest]
+    qr: QueuedRequest
+    rows: List[int]
+    join_step: int
+    first: Any                   # (batch, 1) — token #1, from prefill
+    done: bool = False
+
+    @property
+    def req(self) -> ServeRequest:
+        return self.qr.req
+
+
+@dataclass
+class _Group:
+    """One decode batch in flight over a leased cache-pool arena. Rows sit
+    at per-row positions, so members at different generation depths (and
+    mid-decode joiners) share the one jitted decode step."""
+
     entry: CacheEntry                 # decode plan for the group's bucket
-    context: int                      # max member context (same bucket)
-    kv: Any = None
-    toks: Any = None
-    pos: int = 0
+    arena: CacheArena
+    context: int                      # max member span (stats naming)
+    members: List[_Member]
+    toks: Any                         # (batch_bucket, 1) next decode inputs
+    pos: Any                          # (batch_bucket,) int32 per-row positions
     steps_done: int = 0
-    max_steps: int = 0
+    peak_rows: int = 0                # max *concurrent* leased rows observed
     decoded: List[Any] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
-        return self.steps_done >= self.max_steps
+        return all(m.done for m in self.members)
+
+    @property
+    def seq_bucket(self) -> int:
+        return self.entry.key.seq_bucket
 
     @property
     def total_batch(self) -> int:
@@ -171,8 +227,11 @@ class ContinuousBatchingScheduler:
     one-request-at-a-time ``handle`` calls.
 
     Both plan families come from the server's single :class:`PlanCache`:
-    ``kind="prefill"`` entries for the batched prompt pass, ``kind="decode"``
-    entries for the shared-cache generation steps.
+    ``kind="prefill"`` entries for the batched prompt pass (which now also
+    returns the populated cache rows), ``kind="decode"`` entries for the
+    shared-arena generation steps. ``join_mid_decode`` turns on token-level
+    continuous batching: pending same-bucket requests are prefilled and
+    written into free rows of in-flight groups between decode steps.
     """
 
     def __init__(
@@ -182,85 +241,160 @@ class ContinuousBatchingScheduler:
         max_group_batch: int = 8,
         slo_ms: float = 0.0,
         queue: Optional[RequestQueue] = None,
+        join_mid_decode: bool = True,
     ):
         self.server = server
         self.queue = queue or RequestQueue(server.policy, max_group_batch)
         self.metrics = SchedulerMetrics(slo_s=slo_ms / 1e3)
+        self.join_mid_decode = join_mid_decode
         self.active: List[_Group] = []
         self.results: List[Dict[str, Any]] = []
 
-    # -- group lifecycle ---------------------------------------------------
-    def _start_group(self, members: List[QueuedRequest], now: float) -> _Group:
+    # -- member lifecycle --------------------------------------------------
+    def _admit_members(self, group: _Group, queued: List[QueuedRequest],
+                       rows_per_member: List[List[int]], join_step: int,
+                       now: float) -> List[_Member]:
+        """Prefill ``queued`` as one batch, write their populated cache
+        rows into the group's arena, and seat them at their own positions.
+        Used both at group start (join_step 0) and for mid-decode joins."""
         srv = self.server
-        total_batch = sum(m.req.batch for m in members)
-        context = max(m.req.context for m in members)
-        row = 0
-        for m in members:
-            m.start_s = now
-            m.rows = (row, row + m.req.batch)
-            row += m.req.batch
+        total_batch = sum(qr.req.batch for qr in queued)
+        span = max(srv.request_span(qr.req) for qr in queued)
+        rows_flat = [r for rows in rows_per_member for r in rows]
 
-        # prefill: batched prompt pass at the group's bucket, plan cached
-        first = srv.prefill_first_token(total_batch, context)
+        lengths_rows = []
+        for qr in queued:
+            qr.start_s = now
+            lengths_rows += [qr.req.context] * qr.req.batch
+        entry = srv.prefill_entry(total_batch, span)
+        pb = entry.key.batch_bucket
+        lengths = jnp.asarray(
+            lengths_rows + [1] * (pb - len(lengths_rows)), jnp.int32)
+        logits, pkv = srv.run_prefill(entry, lengths=lengths)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        if pkv is not None:
+            srv.pool.write_rows(group.arena, rows_flat, pkv,
+                                src_rows=range(len(rows_flat)))
+            pos_rows = lengths_rows
+        else:  # no handoff for this family: rows decode from zero state
+            pos_rows = [0] * len(rows_flat)
+        rows_a = jnp.asarray(rows_flat, jnp.int32)
+        group.pos = group.pos.at[rows_a].set(jnp.asarray(pos_rows, jnp.int32))
+        group.toks = group.toks.at[rows_a].set(first[: len(rows_flat)])
 
-        # decode: shared KV cache at the same bucket family
-        entry = srv.decode_entry(total_batch, context)
+        members = []
+        group.peak_rows = max(group.peak_rows, group.arena.rows_used)
+        row_i = 0
+        for qr, rows in zip(queued, rows_per_member):
+            m = _Member(qr=qr, rows=rows, join_step=join_step,
+                        first=first[row_i: row_i + qr.req.batch])
+            row_i += qr.req.batch
+            members.append(m)
+            group.members.append(m)
+            # the prefill token already is token #1: a 1-token request
+            # completes at admission, before any decode step
+            if qr.req.new_tokens <= 1:
+                self._complete(m, group, now)
+        return members
+
+    def _start_group(self, queued: List[QueuedRequest],
+                     now: float) -> Optional[_Group]:
+        srv = self.server
+        total_batch = sum(qr.req.batch for qr in queued)
+        span = max(srv.request_span(qr.req) for qr in queued)
+        entry = srv.decode_entry(total_batch, span)
         b, s = entry.key.batch_bucket, entry.key.seq_bucket
+        # the pool is the single owner of cache construction; force the
+        # lease when nothing is in flight so progress is always possible
+        arena = srv.pool.acquire(b, s, force=not self.active)
+        if arena is None:
+            return None
         group = _Group(
-            members=members,
-            entry=entry,
-            context=context,
-            kv=srv.model.init_cache(b, s),
-            # prefill and decode share the bucket policy, so the prefill
-            # logits already carry one first token per bucket row
-            toks=first,
-            max_steps=max(m.req.new_tokens for m in members),
+            entry=entry, arena=arena,
+            context=max(qr.req.context for qr in queued),
+            members=[],
+            toks=jnp.ones((b, 1), jnp.int32),
+            pos=jnp.zeros((b,), jnp.int32),
         )
-        self.metrics.observe_group([m.req.batch for m in members], b)
+        rows_per_member = [
+            srv.pool.alloc_rows(arena, qr.req.batch) for qr in queued]
+        self._admit_members(group, queued, rows_per_member, 0, now)
+        self.metrics.observe_group([qr.req.batch for qr in queued], b)
         return group
+
+    def _try_joins(self, group: _Group, clock: _Clock) -> None:
+        """Absorb pending same-bucket requests into the group's free arena
+        rows, prefilled at their own positions (token-level continuous
+        batching). Joiners skip the line only for rows the head-of-line
+        request could not use anyway — its own group still forms through
+        ``next_group`` as soon as the pool can lease an arena."""
+        free = group.arena.rows_free
+        if not free:
+            return
+        queued = self.queue.take_joinable(group.seq_bucket, free)
+        if not queued:
+            return
+        rows_per_member = [
+            self.server.pool.alloc_rows(group.arena, qr.req.batch)
+            for qr in queued]
+        members = self._admit_members(group, queued, rows_per_member,
+                                      group.steps_done, clock.now())
+        self.metrics.observe_joins([m.req.batch for m in members])
 
     def _decode_tick(self, group: _Group, clock: _Clock) -> None:
         srv = self.server
-        logits, group.kv = group.entry.step_fn(
-            srv.params, group.kv, group.toks, jnp.int32(group.pos))
+        logits, group.arena.cache = group.entry.step_fn(
+            srv.params, group.arena.cache, group.toks, group.pos)
         group.toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         jax.block_until_ready(group.toks)
         group.decoded.append(group.toks)
-        group.pos += 1
+        group.pos = group.pos + 1
         group.steps_done += 1
         now = clock.now()
         for m in group.members:
-            if m.finish_s < 0 and group.steps_done >= m.req.new_tokens:
-                m.finish_s = now
-                self._complete(m, group)
+            # the prefill token is token #1, so a member needs
+            # new_tokens - 1 decode steps after its join
+            if not m.done and (group.steps_done - m.join_step
+                               >= m.req.new_tokens - 1):
+                self._complete(m, group, now)
 
-    def _complete(self, m: QueuedRequest, group: _Group) -> None:
-        self.metrics.observe_request(m.queue_s, m.exec_s)
-        lo, hi = m.rows
-        toks = jnp.concatenate(group.decoded[: m.req.new_tokens], axis=1)
+    def _complete(self, m: _Member, group: _Group, now: float) -> None:
+        m.done = True
+        m.qr.finish_s = now
+        self.metrics.observe_request(m.qr.queue_s, m.qr.exec_s)
+        rows = jnp.asarray(m.rows, jnp.int32)
+        steps = group.decoded[m.join_step: m.join_step + m.req.new_tokens - 1]
+        toks = jnp.concatenate(
+            [m.first] + [jnp.take(t, rows, axis=0) for t in steps], axis=1)
         self.results.append({
-            "rid": m.rid,
+            "rid": m.qr.rid,
             "batch": m.req.batch,
             "context": m.req.context,
             "bucket": (group.entry.key.batch_bucket,
                        group.entry.key.seq_bucket),
             "group_size": len(group.members),
-            "tokens": toks[lo:hi],
-            "queue_s": m.queue_s,
-            "exec_s": m.exec_s,
-            "total_s": m.total_s,
+            "joined_at_step": m.join_step,
+            "tokens": toks,
+            "queue_s": m.qr.queue_s,
+            "exec_s": m.qr.exec_s,
+            "total_s": m.qr.total_s,
         })
+        # freed rows become mid-decode join capacity immediately
+        self.server.pool.free_rows(group.arena, m.rows)
 
     def _retire_group(self, group: _Group) -> None:
-        """Observed runtime statistics feed dynamic recompilation exactly
-        as in the sequential path."""
+        """Observed runtime statistics — including the cache pool's live
+        bytes — feed dynamic recompilation exactly as in the sequential
+        path; then the arena goes back to the pool for reuse."""
         srv = self.server
+        # the observed batch is the peak *concurrent* row usage — members
+        # joining rows another member freed never widened the batch
         shape = InputShape(
-            f"group_{group.total_batch}x{group.context}",
-            group.context, group.total_batch, "decode")
-        watermark = srv.observed_watermark(group.entry, group.kv, group.toks)
-        srv.observe(group.entry.key,
-                    RuntimeStats(shape=shape, watermark_bytes=watermark))
+            f"group_{group.peak_rows}x{group.context}",
+            group.seq_bucket, group.peak_rows, "decode")
+        stats = srv.observed_stats(group.entry, shape, group.toks)
+        srv.observe(group.entry.key, stats)
+        srv.pool.release(group.arena)
 
     # -- main loop ---------------------------------------------------------
     def run(self, arrivals: Iterable[Tuple[float, ServeRequest]]
@@ -268,9 +402,9 @@ class ContinuousBatchingScheduler:
         """Serve a stream of ``(arrival_s, request)`` pairs to completion.
 
         Returns one record per request (completion order). Tick structure:
-        admit due arrivals → coalesce + prefill at most one new group →
-        one decode step for every active group. Prefill work for new
-        arrivals therefore interleaves with decode of in-flight groups.
+        admit due arrivals → join pending requests into free rows of active
+        groups (mid-decode) → coalesce + prefill at most one new group
+        (pool permitting) → one decode step for every active group.
         """
         todo = sorted(arrivals, key=lambda a: a[0])
         clock = _Clock()
@@ -285,12 +419,21 @@ class ContinuousBatchingScheduler:
                 # idle: skip ahead to the next arrival instead of sleeping
                 clock.advance_to(todo[idx][0])
                 continue
+            if self.join_mid_decode:
+                for group in self.active:
+                    self._try_joins(group, clock)
             if len(self.queue):
                 members = self.queue.next_group()
                 if members:
-                    self.active.append(self._start_group(members, clock.now()))
+                    group = self._start_group(members, clock.now())
+                    if group is None:
+                        # pool budget exhausted: requests wait (or join)
+                        self.queue.requeue_front(members)
+                    else:
+                        self.active.append(group)
             for group in list(self.active):
-                self._decode_tick(group, clock)
+                if not group.done:
+                    self._decode_tick(group, clock)
                 if group.done:
                     self._retire_group(group)
                     self.active.remove(group)
@@ -301,7 +444,8 @@ class ContinuousBatchingScheduler:
         # the scheduler's own total latency, not server.latency — handle()
         # is never called on this path, so the server accumulator is empty
         return scheduler_summary(self.metrics, self.server.metrics,
-                                 self.metrics.total_latency)
+                                 self.metrics.total_latency,
+                                 pool=self.server.pool)
 
 
 def simulate_arrivals(

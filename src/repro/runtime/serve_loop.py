@@ -45,8 +45,10 @@ def make_prefill(model, plan: PlanConfig, mesh_cfg: MeshConfig):
     ctx = ShardCtx(plan, mesh_cfg)
 
     def prefill(params, batch):
-        extra = {k: v for k, v in batch.items() if k != "tokens"}
-        return model.prefill(params, batch["tokens"], extra=extra, ctx=ctx)
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "lengths")}
+        return model.prefill(params, batch["tokens"], extra=extra, ctx=ctx,
+                             lengths=batch.get("lengths"))
 
     return prefill
 
@@ -62,16 +64,20 @@ def cache_shardings(model, batch: int, seq_len: int, plan: PlanConfig,
 
 def greedy_decode(model, params, cache, first_token, start_pos, num_tokens,
                   decode_step=None):
-    """Greedy generation loop (example/driver use)."""
+    """Greedy generation loop (example/driver use). ``start_pos`` may be a
+    scalar (whole batch at one depth) or a (B,) per-row position vector —
+    rows handed off from prefill start at their own prompt length."""
     step = decode_step or (lambda p, c, t, q: model.decode_step(p, c, t, q))
     toks = first_token
     out = []
-    pos = start_pos
+    pos = jnp.asarray(start_pos, jnp.int32)
     for _ in range(num_tokens):
-        logits, cache = step(params, cache, toks, jnp.int32(pos))
+        logits, cache = step(params, cache, toks, pos)
         toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out.append(toks)
-        pos += 1
+        pos = pos + 1
+    if not out:
+        return jnp.zeros((first_token.shape[0], 0), jnp.int32), cache
     return jnp.concatenate(out, axis=1), cache
 
 
@@ -129,8 +135,12 @@ class PlanServer:
         policy: BucketPolicy = BucketPolicy(),
         seed: int = 0,
         prefill: bool = False,
+        pool_arenas: int = 4,
+        pool_max_arenas: int = 0,
+        pool_max_bytes: float = 0.0,
     ):
         from repro.models.model import build_model
+        from repro.runtime.kv_cache import KVCachePool
 
         self.cfg = cfg
         self.mesh_cfg = mesh_cfg or MeshConfig(
@@ -140,16 +150,23 @@ class PlanServer:
         self.model = build_model(cfg, dtype=dtype)
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
         self._params_bytes = _tree_bytes(self.params)
-        self.compiler = PlanCompiler(hw)
+        # compile-time cache statistics are sized for a pool provisioned
+        # with ``pool_arenas`` concurrent bucket arenas; the pool's live
+        # bytes are checked against them at observe() time
+        self.pool_arenas = max(1, pool_arenas)
+        self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas)
+        self.pool = KVCachePool(self.model, max_arenas=pool_max_arenas,
+                                max_bytes=pool_max_bytes)
         self.cache = PlanCache(capacity=capacity)
         self.metrics = self.cache.metrics
         self.latency = LatencyStats()
         self.enable_cache = enable_cache
         self.recompile_margin = recompile_margin
         self.policy = policy
-        # prefill=True: handle() runs the cached-prefill prompt pass before
-        # decoding (full serving semantics); False keeps the PR-1 decode-only
-        # request shape. The scheduler always prefills its groups.
+        # prefill=True: handle() runs the cached-prefill prompt pass, hands
+        # the populated cache rows to decode (no zero-cache restart), and
+        # the prefill-produced first token opens the output; False keeps the
+        # PR-1 decode-only request shape. The scheduler always prefills.
         self.prefill = prefill
 
     # ------------------------------------------------------------------
@@ -192,30 +209,41 @@ class PlanServer:
         both plan families and the scheduler draws each from the cache."""
         return self._entry_for(self._key_for(batch, context, "prefill"))
 
-    def run_prefill(self, entry: CacheEntry, tokens=None):
+    def run_prefill(self, entry: CacheEntry, tokens=None, lengths=None):
         """Execute a cached prefill plan at its bucket shape; returns
-        last-position logits ``(batch_bucket, vocab)``."""
+        ``(logits, cache)``: per-row last-prompt-position logits
+        ``(batch_bucket, vocab)`` plus the populated decode cache (None for
+        families without handoff). ``lengths`` is the per-row prompt length
+        inside the padded bucket (default: the full bucket width)."""
         b, s = entry.key.batch_bucket, entry.key.seq_bucket
         if tokens is None:
             tokens = jnp.ones((b, s), jnp.int32)
-        logits = entry.step_fn(self.params, {"tokens": tokens})
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        logits, kv = entry.step_fn(
+            self.params, {"tokens": tokens, "lengths": lengths})
         jax.block_until_ready(logits)
-        return logits
+        return logits, kv
 
-    def prefill_first_token(self, batch: int, context: int) -> Any:
+    def prefill_first_token(self, batch: int, context: int,
+                            lengths=None) -> Tuple[Any, Any]:
         """Prompt pass through the cached prefill plan; returns the greedy
-        first decode token per bucket row, shape ``(batch_bucket, 1)``.
-        Prefill and decode share the bucket policy, so the rows line up
-        with the decode bucket of the same request shape."""
+        first decode token per bucket row ``(batch_bucket, 1)`` *and* the
+        populated decode cache for the handoff. Prefill and decode share
+        the bucket policy, so the rows and cache slots line up with the
+        decode bucket of the same request shape."""
         entry = self.prefill_entry(batch, context)
-        logits = self.run_prefill(entry)
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        logits, kv = self.run_prefill(entry, lengths=lengths)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None], kv
 
     # ------------------------------------------------------------------
-    def observed_watermark(self, entry: CacheEntry, kv, toks) -> float:
-        """Measured live bytes per chip for one executed request. Each
-        tensor class only divides across the chips the plan actually shards
-        it over; replicated layouts hold a full copy per chip."""
+    def observed_stats(self, entry: CacheEntry, shape: InputShape,
+                       toks) -> RuntimeStats:
+        """Measured runtime statistics for one executed request: the live-
+        bytes watermark per chip (params + the *whole* KV-cache pool +
+        in-flight tokens) and the pool's own per-chip bytes. Each tensor
+        class only divides across the chips the plan actually shards it
+        over; replicated layouts hold a full copy per chip."""
         cfgp = entry.plan.config
         mesh = self.mesh_cfg
         param_div = 1
@@ -229,8 +257,11 @@ class PlanServer:
                 kv_div *= sz
         if cfgp.cache_heads_over_model:
             kv_div *= mesh.model_parallelism
-        return (self._params_bytes / param_div
-                + (_tree_bytes(kv) + toks.nbytes) / kv_div)
+        pool_bytes = self.pool.live_bytes()
+        watermark = (self._params_bytes / param_div
+                     + (pool_bytes + toks.nbytes) / kv_div)
+        return RuntimeStats(shape=shape, watermark_bytes=watermark,
+                            cache_pool_bytes=pool_bytes / kv_div)
 
     def observe(self, key: PlanKey, stats: RuntimeStats
                 ) -> Tuple[Optional[CacheEntry], Tuple[str, ...]]:
@@ -250,31 +281,59 @@ class PlanServer:
             self.metrics.compile_seconds += time.perf_counter() - t_r
         return refreshed, reasons
 
+    def request_span(self, req: ServeRequest) -> int:
+        """Context slots a request needs end-to-end: prompt plus every
+        generated token. Bucketing on the span (not the bare context) is
+        what keeps a context sitting exactly on a power-of-two boundary
+        from overflowing its cache rows mid-decode."""
+        return req.context + req.new_tokens
+
     # ------------------------------------------------------------------
     def handle(self, req: ServeRequest) -> Dict[str, Any]:
-        """Serve one request; returns tokens + per-request accounting."""
+        """Serve one request; returns tokens + per-request accounting.
+
+        With ``prefill=True`` the prompt pass populates the request's cache
+        rows (prefill→decode handoff): decode step 0 consumes the prefill-
+        produced token *at the prompt's position*, that token opens the
+        output, and no token is recomputed against an empty cache.
+        """
         t0 = time.perf_counter()
-        key = self._key_for(req.batch, req.context, "decode")
+        span = self.request_span(req)
+        key = self._key_for(req.batch, span, "decode")
         entry = self._entry_for(key)
 
-        # execute at the bucket shape (requests pad up to the bucket)
+        # execute at the bucket shape (requests pad up to the bucket);
+        # cache rows come from the pool — the single owner of construction
         b, s = key.batch_bucket, key.seq_bucket
-        kv = self.model.init_cache(b, s)
-        if self.prefill:
-            first = self.prefill_first_token(req.batch, req.context)
+        use_handoff = self.prefill and self.model.supports_handoff
+        arena = self.pool.acquire(b, s, zero=not use_handoff, force=True)
+        if use_handoff:
+            lengths = jnp.full((b,), req.context, jnp.int32)
+            first, pkv = self.prefill_first_token(req.batch, span,
+                                                  lengths=lengths)
+            self.pool.write_rows(arena, range(b), pkv)
+            gen, arena.cache = greedy_decode(
+                self.model, self.params, arena.cache, first, lengths,
+                req.new_tokens - 1, decode_step=entry.step_fn)
+            toks = jnp.concatenate([first, gen], axis=1)
         else:
-            first = jnp.ones((b, 1), jnp.int32)
-        toks, kv = greedy_decode(self.model, self.params, kv, first, 0,
-                                 req.new_tokens, decode_step=entry.step_fn)
+            if self.prefill:  # enc-dec / modality frontends: logits only
+                first, _ = self.prefill_first_token(req.batch, span)
+            else:
+                first = jnp.ones((b, 1), jnp.int32)
+            toks, arena.cache = greedy_decode(
+                self.model, self.params, arena.cache, first,
+                jnp.zeros((b,), jnp.int32), req.new_tokens,
+                decode_step=entry.step_fn)
         jax.block_until_ready(toks)
 
-        watermark = self.observed_watermark(entry, kv, toks)
         shape = InputShape(f"req_{req.batch}x{req.context}",
-                           req.context, req.batch, "decode")
-        stats = RuntimeStats(shape=shape, watermark_bytes=watermark)
+                           span, req.batch, "decode")
+        stats = self.observed_stats(entry, shape, toks)
         refreshed, reasons = self.observe(key, stats)
         if refreshed is not None:
             entry = refreshed
+        self.pool.release(arena)
         # latency includes any in-request recompilation — that cost is the
         # mechanism under measurement, not overhead to hide
         latency = time.perf_counter() - t0
@@ -286,7 +345,8 @@ class PlanServer:
             "plan": entry.plan,
             "recompiled": bool(reasons),
             "recompile_reasons": reasons,
-            "watermark_bytes": watermark,
+            "watermark_bytes": stats.watermark_bytes,
+            "pool_bytes": stats.cache_pool_bytes,
         }
 
     # ------------------------------------------------------------------

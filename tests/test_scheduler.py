@@ -25,16 +25,17 @@ CFG = get_config("yi-6b-smoke")
 
 
 def test_coalescing_picks_covering_bucket():
+    # buckets cover context + new_tokens (default 8): 100+8 -> 128 etc.
     q = RequestQueue(BucketPolicy(min_batch=1, min_seq=16), max_group_batch=8)
-    q.admit(ServeRequest(1, 100))   # bucket 128
-    q.admit(ServeRequest(2, 90))    # bucket 128 — joins
-    q.admit(ServeRequest(1, 60))    # bucket 64  — different bucket
-    q.admit(ServeRequest(2, 120))   # bucket 128 — joins
+    q.admit(ServeRequest(1, 100))   # span 108, bucket 128
+    q.admit(ServeRequest(2, 90))    # span  98, bucket 128 — joins
+    q.admit(ServeRequest(1, 40))    # span  48, bucket 64  — different bucket
+    q.admit(ServeRequest(2, 120))   # span 128, bucket 128 — joins
     group = q.next_group()
     assert [m.req.context for m in group] == [100, 90, 120]
     assert sum(m.req.batch for m in group) == 5
     # the other bucket's request is untouched, next in line
-    assert [m.req.context for m in q.pending] == [60]
+    assert [m.req.context for m in q.pending] == [40]
 
 
 def test_coalescing_respects_batch_capacity():
