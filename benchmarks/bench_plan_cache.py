@@ -8,15 +8,20 @@ target: >= 5x lower steady-state per-request latency with the cache on.
 
     PYTHONPATH=src python benchmarks/bench_plan_cache.py [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV rows (harness contract) and exits
-non-zero if the cached path errors, so CI smoke runs catch rot.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), writes the
+full result set to ``BENCH_plan_cache.json`` (the perf-trajectory artifact
+CI uploads), and exits non-zero if the cached path errors, so CI smoke runs
+catch rot.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import statistics
 import sys
+
+RESULTS_JSON = "BENCH_plan_cache.json"
 
 
 def _stream(smoke: bool):
@@ -83,7 +88,16 @@ def main(argv=None) -> int:
     rows, speedup = _measure(args.smoke, args.arch)
     for row in rows:
         print(row, flush=True)
-    if speedup < 5.0:
+    ok = speedup >= 5.0
+    with open(RESULTS_JSON, "w") as f:
+        json.dump({
+            "bench": "plan_cache", "smoke": args.smoke, "arch": args.arch,
+            "rows": rows, "ok": ok,
+            "gates": {"cached_speedup": {"value": speedup, "target": 5.0}},
+        }, f, indent=2)
+        f.write("\n")
+    print(f"# results -> {RESULTS_JSON}", file=sys.stderr)
+    if not ok:
         print(f"FAIL: plan-cache speedup {speedup:.1f}x < 5x target",
               file=sys.stderr)
         return 1

@@ -109,6 +109,8 @@ def estimate_memory(
     hw: HardwareSpec,
     dtype: str = "bfloat16",
     cache_pool_arenas: int = 1,
+    cache_pages: int = 0,
+    cache_page_size: int = 0,
 ) -> MemoryEstimate:
     """``dtype`` is the actual compute dtype (params + activations + grads +
     KV cache); compile-time statistics follow it instead of assuming bf16.
@@ -117,7 +119,14 @@ def estimate_memory(
     row-addressable cache pool (``repro.runtime.kv_cache``) provisioned for
     that many concurrent bucket arenas; 1 is the single-blob behaviour. The
     pool's live bytes at runtime are checked against this compile-time
-    statistic by the dynamic-recompilation predicate."""
+    statistic by the dynamic-recompilation predicate.
+
+    ``cache_pages``/``cache_page_size`` switch the decode cache statistic
+    to block granularity: the attention K/V term is sized as ``cache_pages``
+    fixed-size pages (what a paged pool can physically commit — see
+    :func:`cache_page_count`) instead of ``arenas x bucket`` dense blobs,
+    while per-row recurrent state still scales with the arena count. The
+    paged pool's page-exact live bytes are compared against exactly this."""
     nb = dtype_bytes(dtype)
     est = MemoryEstimate(budget=hw.hbm_bytes)
     p = model.param_count()
@@ -143,8 +152,13 @@ def estimate_memory(
     elif shape.kind == "prefill":
         est.per_device["activations"] = _prefill_activation_bytes(model, shape, plan, dp, mp, nb)
     else:  # decode
-        est.per_device["kv_cache"] = (max(1, cache_pool_arenas)
-                                      * _cache_bytes(model, shape, plan, mesh, nb))
+        if cache_pages and cache_page_size:
+            est.per_device["kv_cache"] = _cache_paged_bytes(
+                model, shape, plan, mesh, nb, cache_pages, cache_page_size,
+                max(1, cache_pool_arenas))
+        else:
+            est.per_device["kv_cache"] = (max(1, cache_pool_arenas)
+                                          * _cache_bytes(model, shape, plan, mesh, nb))
         est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp, nb)
 
     est.per_device["workspace"] = 0.08 * sum(est.per_device.values())
@@ -246,20 +260,36 @@ def _decode_activation_bytes(model: ModelConfig, shape: InputShape, dp: int, mp:
 
 def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int,
                        nb: int = ACT_BYTES) -> float:
-    """Un-sharded cache bytes for one full attention stack."""
-    pat = model.layer_pattern()
-    total = 0.0
+    """Un-sharded cache bytes for one full attention stack: the attention
+    K/V slots plus the sequence-O(1) recurrent/cross state — the same two
+    terms the paged estimate sizes, so dense and paged statistics can never
+    drift apart."""
+    return (batch * _cache_eff_seq(model, seq) * _kv_slot_bytes(model, nb)
+            + _cache_recurrent_bytes(model, batch, nb))
+
+
+def _cache_eff_seq(model: ModelConfig, seq: int) -> int:
+    """Cache slots per attention row for a ``seq`` context (window-aware)."""
+    if model.window_size:
+        return min(seq, model.window_size)
+    if model.serve_window and seq > 262_144:
+        return min(seq, model.serve_window)
+    return seq
+
+
+def _kv_slot_bytes(model: ModelConfig, nb: int = ACT_BYTES) -> float:
+    """Bytes of one K/V cache slot across every attention layer."""
     kv_width = 2 * model.num_kv_heads * model.head_dim
-    for kind in pat:
-        if kind == "a":
-            eff_seq = seq
-            if model.window_size:
-                eff_seq = min(seq, model.window_size)
-            elif model.serve_window and seq > 262_144:
-                # sliding-window serving variant for long_500k (DESIGN §5)
-                eff_seq = min(seq, model.serve_window)
-            total += batch * eff_seq * kv_width * nb
-        elif kind == "s":
+    return model.layer_pattern().count("a") * kv_width * nb
+
+
+def _cache_recurrent_bytes(model: ModelConfig, batch: int,
+                           nb: int = ACT_BYTES) -> float:
+    """Per-arena bytes of the sequence-O(1) cache entries (SSD state, conv
+    tails, RG-LRU state, enc-dec cross K/V) — the part paging cannot touch."""
+    total = 0.0
+    for kind in model.layer_pattern():
+        if kind == "s":
             st = model.ssm_num_heads * model.ssm_head_dim * model.ssm_state
             conv = model.ssm_conv_width * (model.d_inner + 2 * model.ssm_state)
             total += batch * (st + conv) * nb
@@ -267,13 +297,22 @@ def _cache_dense_bytes(model: ModelConfig, seq: int, batch: int,
             w = model.lru_width or model.d_model
             total += batch * w * 4  # RG-LRU state kept fp32 regardless
     if model.is_encdec:
-        # cross-attention K/V over encoder outputs
+        kv_width = 2 * model.num_kv_heads * model.head_dim
         total += model.num_layers * batch * model.encoder_seq * kv_width * nb
     return total
 
 
-def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: MeshConfig,
-                 nb: int = ACT_BYTES) -> float:
+def cache_page_count(model: ModelConfig, seq: int, batch: int,
+                     page: int) -> int:
+    """Physical pages one (batch, seq) paged arena provisions:
+    ``batch * ceil(eff_seq / page)`` (0 for families with no attention)."""
+    if page <= 0 or model.layer_pattern().count("a") == 0:
+        return 0
+    return batch * -(-_cache_eff_seq(model, seq) // page)
+
+
+def _cache_divisors(model: ModelConfig, shape: InputShape, plan: PlanConfig,
+                    mesh: MeshConfig):
     batch_div = 1
     for ax, sz in zip(mesh.axis_names, mesh.shape):
         if ax in plan.cache_batch_axes:
@@ -285,5 +324,25 @@ def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: 
     for ax, sz in zip(mesh.axis_names, mesh.shape):
         if ax in plan.cache_seq_axes:
             div *= sz
+    return batch_div, div
+
+
+def _cache_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig, mesh: MeshConfig,
+                 nb: int = ACT_BYTES) -> float:
+    batch_div, div = _cache_divisors(model, shape, plan, mesh)
     b = max(1, shape.global_batch // batch_div)
     return _cache_dense_bytes(model, shape.seq_len, b, nb) / div
+
+
+def _cache_paged_bytes(model: ModelConfig, shape: InputShape, plan: PlanConfig,
+                       mesh: MeshConfig, nb: int, pages: int, page: int,
+                       arenas: int) -> float:
+    """Worst-case per-chip bytes of a block-granular cache pool provisioned
+    with ``pages`` physical pages (across all arenas) plus ``arenas`` worth
+    of per-row recurrent state. Shards like the dense cache estimate."""
+    batch_div, div = _cache_divisors(model, shape, plan, mesh)
+    b = max(1, shape.global_batch // batch_div)
+    page_frac = b / max(1, shape.global_batch)   # pages follow the batch shard
+    attn = pages * page_frac * page * _kv_slot_bytes(model, nb)
+    rec = arenas * _cache_recurrent_bytes(model, b, nb)
+    return (attn + rec) / div

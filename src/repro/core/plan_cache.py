@@ -177,9 +177,12 @@ def recompile_reasons(plan: ExecutionPlan, stats: RuntimeStats,
                 f"memory watermark {stats.watermark_bytes / mib:.2f}MiB exceeds "
                 f"estimate {plan.memory.total / mib:.2f}MiB by >{margin:.0%}"
             )
-    # KV-cache pool breach: the row-addressable pool's live bytes exceed the
-    # compile-time cache statistic the plan was sized for — same predicate
-    # shape as the watermark check, scoped to the cache tensor class.
+    # KV-cache pool breach: the pool's live bytes exceed the compile-time
+    # cache statistic the plan was sized for — same predicate shape as the
+    # watermark check, scoped to the cache tensor class. With paged arenas
+    # both sides are block-granular: the statistic counts provisioned pages
+    # (memory.cache_page_count) and the observation counts committed pages,
+    # so bucket-shaped slack inside an arena can no longer trip this.
     if stats.cache_pool_bytes and plan.memory is not None:
         kv_est = plan.memory.per_device.get("kv_cache", 0.0)
         if kv_est > 0 and stats.cache_pool_bytes > kv_est * (1.0 + margin):

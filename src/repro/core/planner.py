@@ -28,7 +28,7 @@ from repro.config import (
     TrainConfig,
 )
 from repro.core.cost import analytic_cost
-from repro.core.memory import estimate_memory
+from repro.core.memory import cache_page_count, estimate_memory
 from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats, Strategy
 
 LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
@@ -36,13 +36,26 @@ LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
 
 class PlanCompiler:
     def __init__(self, hw: HardwareSpec = TPU_V5E, headroom: float = 0.9,
-                 cache_pool_arenas: int = 1):
+                 cache_pool_arenas: int = 1, cache_page_size: int = 0):
         self.hw = hw
         self.headroom = headroom
         # decode statistics are sized for a KV-cache pool provisioned for
         # this many concurrent bucket arenas (repro.runtime.kv_cache);
-        # 1 keeps the single-blob seed behaviour for dryruns/tests
+        # 1 keeps the single-blob seed behaviour for dryruns/tests.
+        # cache_page_size > 0 sizes the attention K/V term at block
+        # granularity (pages the paged pool can physically commit) and is
+        # what the pool's page-exact live bytes are compared against.
         self.cache_pool_arenas = cache_pool_arenas
+        self.cache_page_size = cache_page_size
+
+    def _cache_kwargs(self, model: ModelConfig, shape: InputShape) -> dict:
+        kw = {"cache_pool_arenas": self.cache_pool_arenas}
+        if self.cache_page_size and shape.kind == "decode":
+            kw["cache_page_size"] = self.cache_page_size
+            kw["cache_pages"] = self.cache_pool_arenas * cache_page_count(
+                model, shape.seq_len, shape.global_batch,
+                self.cache_page_size)
+        return kw
 
     # ------------------------------------------------------------------
     def compile(
@@ -71,7 +84,7 @@ class PlanCompiler:
             ] or candidates
         for cand in candidates:
             mem = estimate_memory(model, shape, mesh, cand, train, self.hw, dtype,
-                                  cache_pool_arenas=self.cache_pool_arenas)
+                                  **self._cache_kwargs(model, shape))
             if mem_scale != 1.0:
                 mem = mem.scaled(mem_scale)
             if mem.fits(self.headroom):
@@ -86,7 +99,7 @@ class PlanCompiler:
             )
             chosen_mem = estimate_memory(model, shape, mesh, chosen, train, self.hw,
                                          dtype,
-                                         cache_pool_arenas=self.cache_pool_arenas)
+                                         **self._cache_kwargs(model, shape))
             if mem_scale != 1.0:
                 chosen_mem = chosen_mem.scaled(mem_scale)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw)

@@ -79,7 +79,10 @@ class RuntimeStats:
     ``cache_pool_bytes`` is the live size of the row-addressable KV-cache
     pool (``repro.runtime.kv_cache``) at observation time; a pool that has
     outgrown the plan's compile-time cache statistics triggers dynamic
-    recompilation exactly like an activation-watermark breach.
+    recompilation exactly like an activation-watermark breach. With paged
+    arenas the figure is *page-exact* — committed pages plus leased rows'
+    recurrent state, not bucket-shaped arena capacity — so bucket slack no
+    longer masquerades as memory pressure and over-triggers the predicate.
     """
 
     shape: InputShape

@@ -76,7 +76,9 @@ def _build_server(args) -> PlanServer:
                       recompile_margin=args.recompile_margin,
                       prefill=getattr(args, "prefill", False),
                       pool_arenas=args.pool_arenas,
-                      pool_max_arenas=args.pool_max_arenas)
+                      pool_max_arenas=args.pool_max_arenas,
+                      pool_max_bytes=args.pool_max_bytes,
+                      page_size=args.page_size)
 
 
 def _request_mix(args):
@@ -182,6 +184,16 @@ def main():
                     help="hard KV-cache pool budget in arenas (0 = "
                          "unbounded); a full pool queues new groups while "
                          "mid-decode joins keep absorbing work")
+    ap.add_argument("--pool-max-bytes", type=float, default=0.0,
+                    help="hard KV-cache pool budget in bytes (0 = "
+                         "unbounded); with paged arenas the budget charges "
+                         "page-exact committed bytes, so the same budget "
+                         "admits more concurrently-resident requests")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="KV-cache page size in sequence slots: arenas "
+                         "page the sequence dimension and rows commit only "
+                         "the pages their span needs (vLLM-style); 0 "
+                         "restores row-granular bucket-shaped leases")
     ap.add_argument("--recompile-margin", type=float, default=0.25,
                     help="dynamic-recompilation watermark margin")
     ap.add_argument("--seed", type=int, default=0,

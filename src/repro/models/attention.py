@@ -225,6 +225,66 @@ def decode_attention(
     return o[:, None].astype(q.dtype)
 
 
+def paged_slots(tables: jnp.ndarray, lslots: jnp.ndarray,
+                page: int) -> jnp.ndarray:
+    """Physical slot per logical slot through a page table:
+    ``table[lslot // page] * page + lslot % page``.
+
+    ``tables``: (B, max_pages) int32; unallocated entries hold the sentinel
+    ``n_pages``, mapping to out-of-range physical slots (gathers through
+    them are masked by the position validity mask, scatters drop).
+    ``lslots``: (B,) or (B, S) logical slots. Returns same-shape physical
+    slot indices into the arena's flat ``n_pages * page`` slot stack."""
+    lp = jnp.clip(lslots // page, 0, tables.shape[1] - 1)
+    entry = jnp.take_along_axis(
+        tables, lp if lp.ndim > 1 else lp[:, None], axis=1)
+    if lp.ndim == 1:
+        entry = entry[:, 0]
+    return entry * page + jnp.mod(lslots, page)
+
+
+def paged_gather_kv(
+    k_cache: jnp.ndarray,  # (n_slots, Hkv, D) — flat per-arena slot stack
+    v_cache: jnp.ndarray,
+    tables: jnp.ndarray,   # (B, max_pages) int32 page table per row
+    page: int,
+    sc: int,               # logical cache slots per row
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather each row's logical cache view ``(B, sc, Hkv, D)`` out of the
+    shared slot stack. Slots on unallocated pages read clamped garbage —
+    the decode validity mask (slots <= pos) never exposes them."""
+    i = jnp.arange(sc, dtype=jnp.int32)
+    phys = paged_slots(tables, jnp.broadcast_to(i, (tables.shape[0], sc)),
+                       page)
+    phys = jnp.minimum(phys, k_cache.shape[0] - 1)
+    return k_cache[phys], v_cache[phys]
+
+
+def paged_cache_write(
+    k_cache: jnp.ndarray, v_cache: jnp.ndarray,  # (n_slots, Hkv, D)
+    k_new: jnp.ndarray, v_new: jnp.ndarray,      # (B, 1, Hkv, D)
+    pos: jnp.ndarray, tables: jnp.ndarray, page: int, sc: int,
+    *, window: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter each row's new K/V into its page-mapped physical slot.
+    Rotating caches (window > 0) wrap within the row's own pages
+    (``pos mod sc``); non-rotating writes beyond capacity — and writes from
+    rows whose page table is unallocated (free rows) — are dropped."""
+    b = k_new.shape[0]
+    n_slots = k_cache.shape[0]
+    posb = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+    lslot = jnp.mod(posb, sc) if window else posb
+    phys = paged_slots(tables, lslot, page)
+    if not window:
+        phys = jnp.where(posb < sc, phys, n_slots)  # out of capacity: drop
+    k_cache = k_cache.at[phys].set(k_new[:, 0].astype(k_cache.dtype),
+                                   mode="drop")
+    v_cache = v_cache.at[phys].set(v_new[:, 0].astype(v_cache.dtype),
+                                   mode="drop")
+    return k_cache, v_cache
+
+
 def cache_write(
     k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     k_new: jnp.ndarray, v_new: jnp.ndarray,  # (B, 1, Hkv, D)

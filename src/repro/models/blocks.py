@@ -174,19 +174,31 @@ def attn_block_decode(
     cfg: ModelConfig, p: Dict, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
     *, window: int = 0, ctx: ShardCtx = NULL_CTX,
     enc_out_kv: Optional[Tuple] = None,
+    tables: Optional[jnp.ndarray] = None, page: int = 0, sc: int = 0,
 ) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, 1, D). cache: {"k": (B, Sc, Kv, Dh), "v": ...} (kv-head form;
     expansion to full heads happens at the attention einsum). ``pos`` is a
     scalar (whole batch at one depth) or a (B,) vector (rows at different
-    generation depths — the row-addressable cache-pool decode shape)."""
+    generation depths — the row-addressable cache-pool decode shape).
+
+    With ``tables``/``page``/``sc`` the cache is block-granular paged:
+    k/v are flat ``(n_slots, Kv, Dh)`` slot stacks shared by all rows, and
+    the write/read go through each row's page table (physical slot =
+    ``table[i // page] * page + i % page``)."""
     h = rms_norm(x, p["ln1"])
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
     q, k, v, _ = _qkv(cfg, p, h, rope_pos, ctx=ctx, expand=False)
-    kc, vc = ATT.cache_write(cache["k"], cache["v"], k, v, pos, window=window)
-    ke, ve = kc, vc
+    if tables is not None:
+        kc, vc = ATT.paged_cache_write(cache["k"], cache["v"], k, v, pos,
+                                       tables, page, sc, window=window)
+        ke, ve = ATT.paged_gather_kv(kc, vc, tables, page, sc)
+    else:
+        kc, vc = ATT.cache_write(cache["k"], cache["v"], k, v, pos,
+                                 window=window)
+        ke, ve = kc, vc
     if cfg.q_per_kv > 1:
-        ke = jnp.repeat(kc, cfg.q_per_kv, axis=2)
-        ve = jnp.repeat(vc, cfg.q_per_kv, axis=2)
+        ke = jnp.repeat(ke, cfg.q_per_kv, axis=2)
+        ve = jnp.repeat(ve, cfg.q_per_kv, axis=2)
     o = ATT.decode_attention(q, ke, ve, pos, window=window)
     x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     cache = dict(cache, k=kc, v=vc)

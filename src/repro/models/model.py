@@ -263,6 +263,41 @@ class Model:
                 ent["x.v"] = (kv, axes, self.dtype)
         return ent
 
+    @staticmethod
+    def is_paged_cache_key(key: str) -> bool:
+        """Whether a cache entry pages its sequence dimension: attention
+        K/V stacks do; recurrent state (SSD/RG-LRU/conv) and enc-dec cross
+        K/V are O(1) or fixed in sequence and stay per-row."""
+        return (key.endswith(".k") or key.endswith(".v")) \
+            and not key.startswith("x.")
+
+    def paged_cache_entries(self, batch: int, seq_len: int, page: int):
+        """Block-granular cache layout: attention K/V entries trade their
+        per-row sequence dimension ``(L, B, sc, Kv, Dh)`` for one flat
+        per-arena slot stack ``(L, n_pages * page, Kv, Dh)`` shared by all
+        rows through per-row page tables; everything else keeps its
+        ``(L, B, ...)`` row layout. Returns ``(entries, n_pages, sc)``
+        where ``sc`` is the logical slots per row and ``n_pages`` the
+        physical page capacity (``batch * ceil(sc / page)``)."""
+        ent = self.cache_entries(batch, seq_len)
+        sc = self.attn_cache_len(seq_len)
+        has_paged = any(self.is_paged_cache_key(k) for k in ent)
+        n_pages = batch * -(-sc // page) if has_paged else 0
+        out: Dict[str, Tuple] = {}
+        for k, (shape, axes, dt) in ent.items():
+            if self.is_paged_cache_key(k):
+                ll, _b, s, *rest = shape
+                assert s == sc, (k, s, sc)
+                out[k] = ((ll, n_pages * page, *rest),
+                          (axes[0], "kv_slots", *axes[3:]), dt)
+            else:
+                out[k] = (shape, axes, dt)
+        return out, n_pages, sc
+
+    def init_paged_cache(self, batch: int, seq_len: int, page: int):
+        ent, _n_pages, _sc = self.paged_cache_entries(batch, seq_len, page)
+        return {k: jnp.zeros(s, d) for k, (s, a, d) in ent.items()}
+
     def cache_specs(self, batch: int, seq_len: int):
         ent = self.cache_entries(batch, seq_len)
         specs = {k: jax.ShapeDtypeStruct(s, d) for k, (s, a, d) in ent.items()}
@@ -283,35 +318,51 @@ class Model:
 
     def decode_step(self, params, cache: Dict, tokens: jnp.ndarray,
                     pos: jnp.ndarray, ctx: ShardCtx = NULL_CTX,
-                    window_override: Optional[int] = None):
+                    window_override: Optional[int] = None,
+                    tables: Optional[jnp.ndarray] = None, page: int = 0,
+                    seq_len: int = 0):
         """tokens: (B, 1); pos: scalar int32 *or* a (B,) per-row position
         vector — rows of one batch may sit at different generation depths
         (the row-addressable cache-pool decode shape). Returns
         (logits, new_cache). ``window_override``: force rotating-cache
         semantics with this window (otherwise inferred: arch window or
-        long-context serve_window)."""
+        long-context serve_window).
+
+        ``tables``/``page``: block-granular paged decode — attention K/V in
+        ``cache`` are flat per-arena slot stacks (``paged_cache_entries``)
+        addressed through the (B, max_pages) page table; ``seq_len`` is
+        then the logical context bucket the arena was sized for (the flat
+        layout no longer carries it)."""
         cfg = self.cfg
         pos = jnp.asarray(pos, jnp.int32)
         x = self._embed(params, tokens)
+        paged = tables is not None and page > 0
+        sc = self.attn_cache_len(seq_len) if paged else 0
         window = (window_override if window_override is not None
-                  else self.decode_window(cache_seq(cache)))
+                  else self.decode_window(seq_len if paged
+                                          else cache_seq(cache)))
+        if not paged:
+            tables, page, sc = None, 0, 0
 
         if cfg.family == "hybrid":
-            x, cache = self._hybrid_decode(params, x, cache, pos, window, ctx)
+            x, cache = self._hybrid_decode(params, x, cache, pos, window, ctx,
+                                           tables=tables, page=page, sc=sc)
         elif cfg.family == "ssm":
             x, cache = self._scan_decode(params, x, cache, pos, 0, ctx,
                                          prefix="l.", kind="s")
         elif cfg.is_encdec:
             x, cache = self._scan_decode(params, x, cache, pos, window, ctx,
-                                         prefix="d.", kind="a", cross=True)
+                                         prefix="d.", kind="a", cross=True,
+                                         tables=tables, page=page, sc=sc)
         else:
             x, cache = self._scan_decode(params, x, cache, pos, window, ctx,
-                                         prefix="l.", kind="a")
+                                         prefix="l.", kind="a",
+                                         tables=tables, page=page, sc=sc)
         x = rms_norm(x, params["final_ln"])
         return self._logits(params, x), cache
 
     def _scan_decode(self, params, x, cache, pos, window, ctx, *, prefix,
-                     kind, cross=False):
+                     kind, cross=False, tables=None, page=0, sc=0):
         cfg = self.cfg
         stacked = _subtree(params, prefix)
         lcache = _subtree({k: v for k, v in cache.items()
@@ -323,14 +374,16 @@ class Model:
                 lp, lc, xk, xv = xs
                 h, lc2 = B.attn_block_decode(cfg, lp, carry, lc, pos,
                                              window=window, ctx=ctx,
-                                             enc_out_kv=(xk, xv))
+                                             enc_out_kv=(xk, xv),
+                                             tables=tables, page=page, sc=sc)
             elif kind == "s":
                 lp, lc = xs
                 h, lc2 = B.ssd_block_decode(cfg, lp, carry, lc, pos, ctx=ctx)
             else:
                 lp, lc = xs
                 h, lc2 = B.attn_block_decode(cfg, lp, carry, lc, pos,
-                                             window=window, ctx=ctx)
+                                             window=window, ctx=ctx,
+                                             tables=tables, page=page, sc=sc)
             return h, lc2
 
         xs = (stacked, lcache, *xkv) if cross else (stacked, lcache)
@@ -340,7 +393,8 @@ class Model:
             out[prefix + k] = v
         return x, out
 
-    def _hybrid_decode(self, params, x, cache, pos, window, ctx):
+    def _hybrid_decode(self, params, x, cache, pos, window, ctx,
+                       tables=None, page=0, sc=0):
         cfg = self.cfg
         pat = cfg.layer_pattern()
         rp, ap = _subtree(params, "r."), _subtree(params, "a.")
@@ -361,7 +415,8 @@ class Model:
                 lp = jax.tree.map(lambda v, i=ai: v[i], ap)
                 lc = {k: v[ai] for k, v in ac.items()}
                 x, lc2 = B.attn_block_decode(cfg, lp, x, lc, pos,
-                                             window=cfg.window_size, ctx=ctx)
+                                             window=cfg.window_size, ctx=ctx,
+                                             tables=tables, page=page, sc=sc)
                 for k, v in lc2.items():
                     new_ac[k] = new_ac[k].at[ai].set(v)
                 ai += 1

@@ -7,6 +7,7 @@ with per-request latency."""
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -66,10 +67,16 @@ class LatencyStats:
         return sum(self.samples) / len(self.samples) if self.samples else 0.0
 
     def percentile(self, q: float) -> float:
+        """Ceil-based nearest-rank percentile: the smallest sample with at
+        least ``q``% of the distribution at or below it. The previous
+        ``int(round(q/100 * (n-1)))`` indexing went through Python's
+        banker's rounding, which on small sample counts rounds half-way
+        ranks *down* to the even index — flattering p50/p95 by picking the
+        lower sample. Nearest-rank never reports below the true rank."""
         if not self.samples:
             return 0.0
         xs = sorted(self.samples)
-        idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+        idx = min(len(xs) - 1, max(0, math.ceil(q / 100.0 * len(xs)) - 1))
         return xs[idx]
 
     def summary(self) -> str:
@@ -105,6 +112,7 @@ class SchedulerMetrics:
     coalesced_requests: int = 0     # requests that shared a group
     joins: int = 0                  # requests absorbed mid-decode
     join_rows: int = 0              # arena rows filled by mid-decode joins
+    peak_resident: int = 0          # max concurrently in-flight requests
     batch_slots_used: int = 0       # sum of member request batches
     batch_slots_total: int = 0      # sum of group batch-bucket capacities
     slo_met: int = 0
@@ -140,6 +148,12 @@ class SchedulerMetrics:
         self.joins += len(member_batches)
         self.join_rows += sum(member_batches)
 
+    def observe_resident(self, live_requests: int) -> None:
+        """Track the peak number of concurrently in-flight requests — the
+        residency the pool budget actually admitted (the paged-vs-dense
+        fragmentation benchmark gates on this)."""
+        self.peak_resident = max(self.peak_resident, live_requests)
+
     def observe_request(self, queue_s: float, exec_s: float) -> None:
         self.completed += 1
         total = queue_s + exec_s
@@ -158,6 +172,7 @@ class SchedulerMetrics:
                 f"completed={self.completed} groups={self.groups} "
                 f"coalesced={self.coalesced_requests} "
                 f"joins={self.joins} join_rows={self.join_rows} "
+                f"peak_resident={self.peak_resident} "
                 f"bucket_fill={self.bucket_fill:.2f}  |  "
                 f"queue p50={self.queue_latency.percentile(50) * ms:.1f}ms "
                 f"p95={self.queue_latency.percentile(95) * ms:.1f}ms  "
@@ -171,16 +186,24 @@ class SchedulerMetrics:
 
 
 def pool_summary(pool) -> str:
-    """One-line KV-cache pool report (``repro.runtime.kv_cache``): arena
-    churn, row reuse, live occupancy."""
+    """KV-cache pool report (``repro.runtime.kv_cache``): arena churn, row
+    reuse, live occupancy — plus, for paged pools, page churn and internal
+    fragmentation (slack inside leased pages)."""
     m = pool.metrics
     mib = 1024 ** 2
-    return (f"kv_pool: arenas={m.arenas_created} reused={m.arenas_reused} "
+    line = (f"kv_pool: arenas={m.arenas_created} reused={m.arenas_reused} "
             f"denied={m.arenas_denied} rows={m.rows_leased} "
             f"rows_reused={m.rows_reused} handoffs={m.handoff_writes} "
             f"occupancy={pool.occupancy():.2f} "
             f"live={pool.live_bytes() / mib:.1f}MiB "
             f"peak={m.peak_bytes / mib:.1f}MiB")
+    if getattr(pool, "paged", False):
+        line += (f"\nkv_pages: size={pool.page_size} "
+                 f"leased={m.pages_leased} freed={m.pages_freed} "
+                 f"denied={m.pages_denied} peak={m.peak_pages} "
+                 f"live={pool.pages_live()} "
+                 f"frag={1.0 - pool.slot_utilization():.2f}")
+    return line
 
 
 def scheduler_summary(sched: "SchedulerMetrics", cache: PlanCacheMetrics,

@@ -137,17 +137,28 @@ class RequestQueue:
         return group
 
     def requeue_front(self, members: Sequence[QueuedRequest]) -> None:
-        """Return a popped group to the head of the line (pool refused the
-        arena lease); arrival order within the queue is preserved."""
-        self._pending = list(members) + self._pending
+        """Return a popped group to the queue (pool refused the arena
+        lease), merging by *arrival order* — not wholesale at the front.
+        A refused group is its head plus same-bucket riders popped from
+        deep in the queue; reinserting the riders ahead of older
+        other-bucket requests would let them jump the line and silently
+        break ``next_group``'s head-of-line fairness (``_pending[0]`` must
+        stay the globally oldest pending request)."""
+        self._pending = sorted(self._pending + list(members),
+                               key=lambda qr: (qr.arrival_s, qr.rid))
 
-    def take_joinable(self, seq_bucket: int, max_rows: int
-                      ) -> List[QueuedRequest]:
+    def take_joinable(self, seq_bucket: int, max_rows: int,
+                      fits=None) -> List[QueuedRequest]:
         """Pop pending same-bucket requests that fit in ``max_rows`` free
         arena rows, strictly FIFO *within the bucket*: scanning stops at
         the first same-bucket request that does not fit, so later narrow
         arrivals can never leapfrog a wide head of their own bucket forever
-        (the no-starvation guarantee extends to mid-decode joins)."""
+        (the no-starvation guarantee extends to mid-decode joins).
+
+        ``fits(qr)``: extra admission predicate (free cache pages, byte
+        budget); it may track cumulative commitments across accepted
+        candidates — it is called once per candidate, in scan order, and a
+        False return stops the scan like an unfitting batch does."""
         taken: List[QueuedRequest] = []
         room = max_rows
         for qr in list(self._pending):
@@ -156,6 +167,8 @@ class RequestQueue:
             if self.seq_bucket(qr.req) != seq_bucket:
                 continue
             if qr.req.batch > room:
+                break
+            if fits is not None and not fits(qr):
                 break
             taken.append(qr)
             room -= qr.req.batch
@@ -186,6 +199,7 @@ class _Member:
     rows: List[int]
     join_step: int
     first: Any                   # (batch, 1) — token #1, from prefill
+    base_pos: int = 0            # decode start position (prompt len / 0)
     done: bool = False
 
     @property
@@ -249,8 +263,26 @@ class ContinuousBatchingScheduler:
         self.join_mid_decode = join_mid_decode
         self.active: List[_Group] = []
         self.results: List[Dict[str, Any]] = []
+        # requests already counted in pages_denied — the join predicate runs
+        # every tick, and a retried candidate must not re-count as a denial
+        self._page_denied_rids: set = set()
 
     # -- member lifecycle --------------------------------------------------
+    def _alloc_rows_checked(self, arena, qr: QueuedRequest,
+                            where: str) -> List[int]:
+        """Lease a member's arena rows; a ``None`` return means the
+        admission accounting upstream (free-row check, join predicate) is
+        out of sync with the arena — fail loudly with context instead of
+        letting a ``TypeError`` surface deep inside ``_admit_members``."""
+        rows = self.server.pool.alloc_rows(arena, qr.req.batch)
+        if rows is None:
+            raise RuntimeError(
+                f"KV pool row invariant violated in {where}: request "
+                f"rid={qr.rid} needs {qr.req.batch} rows but arena "
+                f"{arena.batch}x{arena.seq} has only {arena.rows_free} free "
+                f"({arena.rows_used} leased)")
+        return rows
+
     def _admit_members(self, group: _Group, queued: List[QueuedRequest],
                        rows_per_member: List[List[int]], join_step: int,
                        now: float) -> List[_Member]:
@@ -258,13 +290,24 @@ class ContinuousBatchingScheduler:
         rows into the group's arena, and seat them at their own positions.
         Used both at group start (join_step 0) and for mid-decode joins."""
         srv = self.server
+        handoff = srv.model.supports_handoff
         total_batch = sum(qr.req.batch for qr in queued)
         span = max(srv.request_span(qr.req) for qr in queued)
         rows_flat = [r for rows in rows_per_member for r in rows]
 
+        # commit pages before the handoff scatter lands on them: each row
+        # leases its prompt-covering pages now and reserves its span
+        for qr, rows in zip(queued, rows_per_member):
+            for r in rows:
+                srv.pool.admit_row(group.arena, r,
+                                   prompt=qr.req.context if handoff else 0,
+                                   span=srv.request_span(qr.req))
+
         lengths_rows = []
         for qr in queued:
             qr.start_s = now
+            # once admitted (group start or join), a page denial is history
+            self._page_denied_rids.discard(qr.rid)
             lengths_rows += [qr.req.context] * qr.req.batch
         entry = srv.prefill_entry(total_batch, span)
         pb = entry.key.batch_bucket
@@ -276,7 +319,11 @@ class ContinuousBatchingScheduler:
             srv.pool.write_rows(group.arena, rows_flat, pkv,
                                 src_rows=range(len(rows_flat)))
             pos_rows = lengths_rows
-        else:  # no handoff for this family: rows decode from zero state
+        else:  # no handoff for this family: rows decode from zero state —
+            # clear any state a prior tenant of these rows/pages left behind
+            # (mid-decode joiners can inherit rows a completed member freed)
+            if join_step > 0:
+                srv.pool.zero_rows(group.arena, rows_flat)
             pos_rows = [0] * len(rows_flat)
         rows_a = jnp.asarray(rows_flat, jnp.int32)
         group.pos = group.pos.at[rows_a].set(jnp.asarray(pos_rows, jnp.int32))
@@ -287,7 +334,9 @@ class ContinuousBatchingScheduler:
         row_i = 0
         for qr, rows in zip(queued, rows_per_member):
             m = _Member(qr=qr, rows=rows, join_step=join_step,
-                        first=first[row_i: row_i + qr.req.batch])
+                        first=first[row_i: row_i + qr.req.batch],
+                        base_pos=qr.req.context if (handoff and pkv is not None)
+                        else 0)
             row_i += qr.req.batch
             members.append(m)
             group.members.append(m)
@@ -300,13 +349,25 @@ class ContinuousBatchingScheduler:
     def _start_group(self, queued: List[QueuedRequest],
                      now: float) -> Optional[_Group]:
         srv = self.server
+        handoff = srv.model.supports_handoff
         total_batch = sum(qr.req.batch for qr in queued)
         span = max(srv.request_span(qr.req) for qr in queued)
         entry = srv.decode_entry(total_batch, span)
         b, s = entry.key.batch_bucket, entry.key.seq_bucket
+        # page-exact admission demand: what this group's members commit
+        # (rows + span pages), not the arena's bucket-shaped capacity
+        demand = sum(srv.pool.member_bytes(s, qr.req.batch,
+                                           srv.request_span(qr.req))
+                     for qr in queued) if srv.pool.paged else None
         # the pool is the single owner of cache construction; force the
-        # lease when nothing is in flight so progress is always possible
-        arena = srv.pool.acquire(b, s, force=not self.active)
+        # lease when nothing is in flight so progress is always possible.
+        # A recycled arena may hold a previous tenant's K/V and recurrent
+        # state: families without a prefill handoff decode from what they
+        # assume is a zero cache, so their lease must be zeroed (the
+        # handoff write overwrites admitted rows wholesale — no zero needed)
+        arena = srv.pool.acquire(b, s, zero=not handoff,
+                                 force=not self.active,
+                                 demand_bytes=demand)
         if arena is None:
             return None
         group = _Group(
@@ -317,25 +378,54 @@ class ContinuousBatchingScheduler:
             pos=jnp.zeros((b,), jnp.int32),
         )
         rows_per_member = [
-            srv.pool.alloc_rows(arena, qr.req.batch) for qr in queued]
+            self._alloc_rows_checked(arena, qr, "_start_group")
+            for qr in queued]
         self._admit_members(group, queued, rows_per_member, 0, now)
         self.metrics.observe_group([qr.req.batch for qr in queued], b)
         return group
 
     def _try_joins(self, group: _Group, clock: _Clock) -> None:
         """Absorb pending same-bucket requests into the group's free arena
-        rows, prefilled at their own positions (token-level continuous
-        batching). Joiners skip the line only for rows the head-of-line
-        request could not use anyway — its own group still forms through
-        ``next_group`` as soon as the pool can lease an arena."""
-        free = group.arena.rows_free
+        rows — and free cache *pages*, which is the real admission unit on
+        a paged pool — prefilled at their own positions (token-level
+        continuous batching). Joiners skip the line only for capacity the
+        head-of-line request could not use anyway — its own group still
+        forms through ``next_group`` as soon as the pool can lease an
+        arena."""
+        srv = self.server
+        arena = group.arena
+        free = arena.rows_free
         if not free:
             return
-        queued = self.queue.take_joinable(group.seq_bucket, free)
+        fits = None
+        if srv.pool.paged:
+            state = {"pages": arena.allocator.available if arena.n_pages
+                     else None,
+                     "bytes": srv.pool.bytes_room()}
+
+            def fits(qr):
+                span = srv.request_span(qr.req)
+                pages = arena.span_pages(span) * qr.req.batch
+                nbytes = srv.pool.member_bytes(arena.seq, qr.req.batch, span)
+                if (state["pages"] is not None and pages > state["pages"]) \
+                        or nbytes > state["bytes"]:
+                    # count each backpressured *request* once, not once per
+                    # tick it stays refused
+                    if qr.rid not in self._page_denied_rids:
+                        self._page_denied_rids.add(qr.rid)
+                        srv.pool.metrics.pages_denied += 1
+                    return False
+                if state["pages"] is not None:
+                    state["pages"] -= pages
+                state["bytes"] -= nbytes
+                self._page_denied_rids.discard(qr.rid)
+                return True
+
+        queued = self.queue.take_joinable(group.seq_bucket, free, fits=fits)
         if not queued:
             return
         rows_per_member = [
-            self.server.pool.alloc_rows(group.arena, qr.req.batch)
+            self._alloc_rows_checked(arena, qr, "_try_joins")
             for qr in queued]
         members = self._admit_members(group, queued, rows_per_member,
                                       group.steps_done, clock.now())
@@ -343,8 +433,20 @@ class ContinuousBatchingScheduler:
 
     def _decode_tick(self, group: _Group, clock: _Clock) -> None:
         srv = self.server
-        logits, group.arena.cache = group.entry.step_fn(
-            srv.params, group.arena.cache, group.toks, group.pos)
+        if srv.pool.paged:
+            # grant the page covering each live row's next write position
+            # (on-demand paging: drawn from the admission-time reservation,
+            # so this can never fail mid-decode)
+            for m in group.members:
+                if not m.done:
+                    wpos = m.base_pos + (group.steps_done - m.join_step)
+                    srv.pool.ensure_decode_slots(group.arena, m.rows, wpos)
+            logits, group.arena.cache = group.entry.step_fn(
+                srv.params, group.arena.cache, group.toks, group.pos,
+                group.arena.tables)
+        else:
+            logits, group.arena.cache = group.entry.step_fn(
+                srv.params, group.arena.cache, group.toks, group.pos)
         group.toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         jax.block_until_ready(group.toks)
         group.decoded.append(group.toks)
@@ -431,6 +533,8 @@ class ContinuousBatchingScheduler:
                         self.queue.requeue_front(members)
                     else:
                         self.active.append(group)
+            self.metrics.observe_resident(
+                sum(1 for g in self.active for m in g.members if not m.done))
             for group in list(self.active):
                 if not group.done:
                     self._decode_tick(group, clock)

@@ -32,11 +32,25 @@ from repro.models.common import ShardCtx
 from repro.runtime.metrics import LatencyStats, serve_summary
 
 
-def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig):
+def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig,
+                     page: int = 0, seq_len: int = 0):
+    """``page > 0`` builds the block-granular paged decode step: it takes a
+    fifth argument — the (B, max_pages) page-table array — and the cache's
+    attention K/V are flat per-arena slot stacks (``paged_cache_entries``).
+    ``seq_len`` is the bucket context the arena is sized for (the flat
+    layout no longer carries it)."""
     ctx = ShardCtx(plan, mesh_cfg)
 
-    def decode_step(params, cache, tokens, pos):
-        return model.decode_step(params, cache, tokens, pos, ctx)
+    if page:
+        # tables defaults to None for families with no paged entries
+        # (pure-recurrent stacks): same step signature, dense semantics
+        def decode_step(params, cache, tokens, pos, tables=None):
+            return model.decode_step(params, cache, tokens, pos, ctx,
+                                     tables=tables, page=page,
+                                     seq_len=seq_len)
+    else:
+        def decode_step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, ctx)
 
     return decode_step
 
@@ -63,16 +77,21 @@ def cache_shardings(model, batch: int, seq_len: int, plan: PlanConfig,
 
 
 def greedy_decode(model, params, cache, first_token, start_pos, num_tokens,
-                  decode_step=None):
+                  decode_step=None, tables=None):
     """Greedy generation loop (example/driver use). ``start_pos`` may be a
     scalar (whole batch at one depth) or a (B,) per-row position vector —
-    rows handed off from prefill start at their own prompt length."""
+    rows handed off from prefill start at their own prompt length.
+    ``tables``: page-table array for a paged decode step (the step then
+    takes it as a fifth argument; rows must be page-admitted eagerly)."""
     step = decode_step or (lambda p, c, t, q: model.decode_step(p, c, t, q))
     toks = first_token
     out = []
     pos = jnp.asarray(start_pos, jnp.int32)
     for _ in range(num_tokens):
-        logits, cache = step(params, cache, toks, pos)
+        if tables is not None:
+            logits, cache = step(params, cache, toks, pos, tables)
+        else:
+            logits, cache = step(params, cache, toks, pos)
         toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         out.append(toks)
         pos = pos + 1
@@ -138,6 +157,7 @@ class PlanServer:
         pool_arenas: int = 4,
         pool_max_arenas: int = 0,
         pool_max_bytes: float = 0.0,
+        page_size: int = 64,
     ):
         from repro.models.model import build_model
         from repro.runtime.kv_cache import KVCachePool
@@ -150,13 +170,18 @@ class PlanServer:
         self.model = build_model(cfg, dtype=dtype)
         self.params = self.model.init_params(jax.random.PRNGKey(seed))
         self._params_bytes = _tree_bytes(self.params)
+        # block-granular paged arenas (0 = row-granular PR-3 behaviour):
+        # rows commit pages, not bucket-shaped sequence slack
+        self.page_size = max(0, int(page_size))
         # compile-time cache statistics are sized for a pool provisioned
         # with ``pool_arenas`` concurrent bucket arenas; the pool's live
         # bytes are checked against them at observe() time
         self.pool_arenas = max(1, pool_arenas)
-        self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas)
+        self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas,
+                                     cache_page_size=self.page_size)
         self.pool = KVCachePool(self.model, max_arenas=pool_max_arenas,
-                                max_bytes=pool_max_bytes)
+                                max_bytes=pool_max_bytes,
+                                page_size=self.page_size)
         self.cache = PlanCache(capacity=capacity)
         self.metrics = self.cache.metrics
         self.latency = LatencyStats()
@@ -173,7 +198,9 @@ class PlanServer:
     def _build_step(self, plan: ExecutionPlan):
         if plan.shape.kind == "prefill":
             return jax.jit(make_prefill(self.model, plan.config, self.mesh_cfg))
-        return jax.jit(make_decode_step(self.model, plan.config, self.mesh_cfg))
+        return jax.jit(make_decode_step(self.model, plan.config, self.mesh_cfg,
+                                        page=self.page_size,
+                                        seq_len=plan.shape.seq_len))
 
     def _compile_entry(self, key: PlanKey) -> CacheEntry:
         t0 = time.perf_counter()
@@ -307,6 +334,15 @@ class PlanServer:
         b, s = key.batch_bucket, key.seq_bucket
         use_handoff = self.prefill and self.model.supports_handoff
         arena = self.pool.acquire(b, s, zero=not use_handoff, force=True)
+        if self.pool.paged:
+            # the sequential path occupies every bucket row for the whole
+            # request; commit each row's span pages eagerly (no per-step
+            # on-demand growth to interleave with the greedy loop)
+            rows = self.pool.alloc_rows(arena, b)
+            for r in rows:
+                self.pool.admit_row(arena, r,
+                                    prompt=req.context if use_handoff else 0,
+                                    span=span, eager=True)
         if use_handoff:
             lengths = jnp.full((b,), req.context, jnp.int32)
             first, pkv = self.prefill_first_token(req.batch, span,
@@ -314,7 +350,8 @@ class PlanServer:
             self.pool.write_rows(arena, range(b), pkv)
             gen, arena.cache = greedy_decode(
                 self.model, self.params, arena.cache, first, lengths,
-                req.new_tokens - 1, decode_step=entry.step_fn)
+                req.new_tokens - 1, decode_step=entry.step_fn,
+                tables=arena.tables)
             toks = jnp.concatenate([first, gen], axis=1)
         else:
             if self.prefill:  # enc-dec / modality frontends: logits only
@@ -324,7 +361,7 @@ class PlanServer:
             toks, arena.cache = greedy_decode(
                 self.model, self.params, arena.cache, first,
                 jnp.zeros((b,), jnp.int32), req.new_tokens,
-                decode_step=entry.step_fn)
+                decode_step=entry.step_fn, tables=arena.tables)
         jax.block_until_ready(toks)
 
         shape = InputShape(f"req_{req.batch}x{req.context}",

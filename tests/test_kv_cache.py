@@ -396,12 +396,37 @@ def test_pool_breach_triggers_recompile_and_converges():
 
 
 def test_observed_stats_carry_pool_bytes():
+    """Paged pools report *page-exact* live bytes: an idle arena costs
+    nothing, an admitted row costs its committed span pages — far below
+    the arena's bucket-shaped capacity (the slack that used to over-trigger
+    the recompile predicate)."""
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
+    entry = srv.decode_entry(2, 200)              # seq bucket 256, 4 pages
+    arena = srv.pool.acquire(entry.key.batch_bucket, entry.key.seq_bucket,
+                             force=True)
+    stats = srv.observed_stats(
+        entry, InputShape("t", 200, 2, "decode"), jnp.ones((2, 1), jnp.int32))
+    assert stats.cache_pool_bytes == 0.0          # nothing committed yet
+    rows = srv.pool.alloc_rows(arena, 2)
+    for r in rows:
+        srv.pool.admit_row(arena, r, prompt=30, span=40)
+    stats = srv.observed_stats(
+        entry, InputShape("t", 200, 2, "decode"), jnp.ones((2, 1), jnp.int32))
+    expect = 2 * srv.pool.member_bytes(entry.key.seq_bucket, 1, 40)
+    assert stats.cache_pool_bytes == pytest.approx(expect)
+    assert 0 < stats.cache_pool_bytes < arena.nbytes
+    assert stats.watermark_bytes > stats.cache_pool_bytes  # + params
+    srv.pool.release(arena)
+
+
+def test_observed_stats_row_granular_pool_charges_arena():
+    """page_size=0 keeps the PR-3 row-granular accounting: a leased arena
+    charges its full bucket-shaped capacity."""
+    srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, page_size=0)
     entry = srv.decode_entry(2, 64)
     arena = srv.pool.acquire(entry.key.batch_bucket, entry.key.seq_bucket,
                              force=True)
     stats = srv.observed_stats(
         entry, InputShape("t", 64, 2, "decode"), jnp.ones((2, 1), jnp.int32))
     assert stats.cache_pool_bytes == pytest.approx(arena.nbytes)
-    assert stats.watermark_bytes > stats.cache_pool_bytes  # + params
     srv.pool.release(arena)
