@@ -1,0 +1,220 @@
+"""ServingEngine benchmark: per-token streaming overhead vs batch-mode
+completion reading, time-to-first-token / inter-token latency, and
+early-termination reclamation, on the same mixed-shape streams.
+
+Streaming is supposed to be *observation, not a different execution path*:
+the engine emits a :class:`TokenEvent` per live request per tick either
+way, and ``events()`` consumers just drain them. This bench holds that
+claim to a number — consuming the full event stream must cost <= 10% wall
+time over running the identical workload through the batch adapter
+(``ContinuousBatchingScheduler.run``) and reading tokens at the end — and
+verifies the streamed tokens are byte-identical to the batch results.
+
+Acceptance targets (CI-enforced):
+
+- streamed wall time <= 1.10x batch wall time on the same request stream;
+- streamed tokens byte-identical to batch-mode tokens per request;
+- zero recompiles anywhere (dtype-, pool- and page-aware estimates).
+
+Also reported (not gated): time-to-first-token and inter-token latency
+percentiles, and the cancel scenario — half the requests cancelled
+mid-decode, showing reclaimed pages turning into mid-decode join capacity.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--smoke]
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), writes the
+full result set to ``BENCH_engine.json`` (the perf-trajectory artifact CI
+uploads), and exits non-zero below the gate or on a spurious recompile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+TARGET_OVERHEAD = 1.10
+RESULTS_JSON = "BENCH_engine.json"
+
+
+def _stream(smoke: bool):
+    """Single-sequence requests over two context buckets (the
+    bench_scheduler mix): enough ticks that per-token event overhead would
+    show, small enough for CI smoke."""
+    mix = [(1, 40), (1, 90), (1, 60), (1, 100), (1, 50), (1, 120),
+           (1, 40), (1, 100)]
+    if smoke:
+        return mix, 8, 4
+    return mix * 2, 8, 6
+
+
+def _time_trial(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _measure(smoke: bool, arch: str):
+    """Returns (rows, overhead, equal, recompiles, detail)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.runtime.engine import ServingEngine
+    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                         simulate_arrivals)
+    from repro.runtime.serve_loop import PlanServer, ServeRequest
+
+    cfg = get_config(arch)
+    shapes, new_tokens, trials = _stream(smoke)
+    reqs = [ServeRequest(b, c, new_tokens) for b, c in shapes]
+
+    # one server for everything: identical params, warm plan cache
+    srv = PlanServer(cfg, dtype=jnp.float32, capacity=16)
+    ContinuousBatchingScheduler(srv, max_group_batch=8).run(
+        simulate_arrivals(reqs))
+
+    def run_batch():
+        sched = ContinuousBatchingScheduler(srv, max_group_batch=8)
+        return sched.run(simulate_arrivals(reqs))
+
+    def run_streamed():
+        eng = ServingEngine(srv)
+        handles = [eng.submit(r) for r in reqs]
+        toks = {h.rid: [] for h in handles}
+        for ev in eng.events():
+            if ev.token is not None:
+                toks[ev.rid].append(ev.token)
+        return eng, handles, toks
+
+    # interleave trials so transient box load penalizes both paths alike,
+    # and gate on the *median per-pair ratio*: each back-to-back pair runs
+    # identical jitted work, so the pair ratio isolates the streaming
+    # overhead from absolute box speed; the median drops spike-contaminated
+    # pairs on either side (a min would let one slow batch half mask a
+    # real streaming regression, a ratio of independent minima would let
+    # one unlucky streamed floor fail the gate)
+    batch_s = streamed_s = None
+    batch_results = streamed_out = None
+    ratios = []
+    for _ in range(trials):
+        res = {}
+        b_dt = _time_trial(lambda: res.setdefault("r", run_batch()))
+        if batch_s is None or b_dt < batch_s:
+            batch_s, batch_results = b_dt, res["r"]
+        res = {}
+        s_dt = _time_trial(lambda: res.setdefault("r", run_streamed()))
+        if streamed_s is None or s_dt < streamed_s:
+            streamed_s, streamed_out = s_dt, res["r"]
+        if b_dt:
+            ratios.append(s_dt / b_dt)
+    overhead = statistics.median(ratios) if ratios else 0.0
+
+    # streamed tokens must be byte-identical to the batch-mode results
+    eng, handles, toks = streamed_out
+    batch_by_rid = {r["rid"]: np.asarray(r["tokens"]) for r in batch_results}
+    equal = True
+    for orig, h in zip(reqs, handles):
+        got = np.concatenate([np.asarray(t) for t in toks[h.rid]], axis=1)
+        if not np.array_equal(got, batch_by_rid[orig.rid]):
+            equal = False
+    m = eng.metrics
+    ttft50 = m.ttft_latency.percentile(50)
+    ttft95 = m.ttft_latency.percentile(95)
+    itl50 = m.itl_latency.percentile(50)
+    itl95 = m.itl_latency.percentile(95)
+
+    # cancel scenario (informational): half the requests hang up after 2
+    # tokens; their rows/pages return the same tick and join-admit the rest
+    srv_c = PlanServer(cfg, dtype=jnp.float32, capacity=16)
+    n_c = 6 if smoke else 10
+    cancel_reqs = [ServeRequest(1, 60, 24) for _ in range(n_c)]
+    eng_c = ServingEngine(srv_c)
+    ch = {h.rid: h for h in (eng_c.submit(r) for r in cancel_reqs)}
+    victims = {r.rid for r in cancel_reqs[::2]}
+    for ev in eng_c.events():
+        if ev.token is not None and ev.rid in victims and ev.index + 1 >= 2:
+            eng_c.cancel(ch[ev.rid])
+    reclaimed = srv_c.pool.metrics.pages_reclaimed
+
+    recompiles = srv.metrics.recompiles + srv_c.metrics.recompiles
+    n = len(reqs)
+    rows = [
+        f"engine_batch,{batch_s / n * 1e6:.0f},"
+        f"rps={n / batch_s:.2f}",
+        f"engine_streamed,{streamed_s / n * 1e6:.0f},"
+        f"rps={n / streamed_s:.2f};overhead_x={overhead:.2f};"
+        f"target<={TARGET_OVERHEAD};tokens_equal={int(equal)}",
+        f"engine_ttft,{ttft50 * 1e6:.0f},"
+        f"p95_us={ttft95 * 1e6:.0f};itl_p50_us={itl50 * 1e6:.0f};"
+        f"itl_p95_us={itl95 * 1e6:.0f}",
+        f"engine_cancel,{reclaimed},"
+        f"cancelled={eng_c.metrics.cancelled};"
+        f"completed={eng_c.metrics.completed};"
+        f"joins={eng_c.metrics.joins}",
+    ]
+    detail = {
+        "batch_s": batch_s, "streamed_s": streamed_s,
+        "overhead": overhead, "tokens_equal": equal,
+        "ttft_p50_s": ttft50, "ttft_p95_s": ttft95,
+        "itl_p50_s": itl50, "itl_p95_s": itl95,
+        "cancel": {"cancelled": eng_c.metrics.cancelled,
+                   "completed": eng_c.metrics.completed,
+                   "joins": eng_c.metrics.joins,
+                   "pages_reclaimed": reclaimed},
+    }
+    return rows, overhead, equal, recompiles, detail
+
+
+def run(smoke: bool = False, arch: str = "yi-6b-smoke"):
+    """Harness entry point (benchmarks/run.py contract): CSV rows only."""
+    return _measure(smoke, arch)[0]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (seconds, not minutes)")
+    ap.add_argument("--arch", default="yi-6b-smoke")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    rows, overhead, equal, recompiles, detail = _measure(args.smoke,
+                                                         args.arch)
+    for row in rows:
+        print(row, flush=True)
+    ok = True
+    if overhead > TARGET_OVERHEAD:
+        print(f"FAIL: streaming overhead {overhead:.2f}x > "
+              f"{TARGET_OVERHEAD}x target", file=sys.stderr)
+        ok = False
+    if not equal:
+        print("FAIL: streamed tokens diverged from batch-mode tokens",
+              file=sys.stderr)
+        ok = False
+    if recompiles:
+        print(f"FAIL: fp32 streams burned {recompiles} recompiles "
+              f"(dtype-, pool- and page-aware estimates should need zero)",
+              file=sys.stderr)
+        ok = False
+    with open(RESULTS_JSON, "w") as f:
+        json.dump({
+            "bench": "engine", "smoke": args.smoke, "arch": args.arch,
+            "rows": rows, "ok": ok,
+            "gates": {
+                "streaming_overhead": {"value": overhead,
+                                       "target": TARGET_OVERHEAD},
+                "tokens_equal": {"value": bool(equal), "target": True},
+                "recompiles": {"value": recompiles, "target": 0},
+            },
+            "detail": detail,
+        }, f, indent=2)
+        f.write("\n")
+    print(f"# results -> {RESULTS_JSON}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,14 +12,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_kernels, bench_operator_selection,
-                            bench_parfor, bench_plan_cache,
-                            bench_plan_selection, bench_roofline)
+    from benchmarks import (bench_engine, bench_kernels,
+                            bench_operator_selection, bench_parfor,
+                            bench_plan_cache, bench_plan_selection,
+                            bench_roofline)
 
     print("name,us_per_call,derived")
     for mod in (bench_operator_selection, bench_plan_selection,
-                bench_plan_cache, bench_parfor, bench_kernels,
-                bench_roofline):
+                bench_plan_cache, bench_engine, bench_parfor,
+                bench_kernels, bench_roofline):
         try:
             for row in mod.run():
                 print(row, flush=True)

@@ -26,6 +26,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # SystemML's format decision threshold: matrices with sparsity below this are
 # stored sparse (MatrixBlock.SPARSITY_TURN_POINT = 0.4).
@@ -63,8 +64,6 @@ class MatrixCharacteristics:
 
 
 def characteristics(x) -> MatrixCharacteristics:
-    import numpy as np
-
     x = np.asarray(x)
     return MatrixCharacteristics(x.shape[0], x.shape[1], int((x != 0).sum()))
 
@@ -111,8 +110,6 @@ class CSRMatrix:
 
 
 def to_csr(x: jnp.ndarray, capacity: int | None = None) -> CSRMatrix:
-    import numpy as np
-
     xn = np.asarray(x)
     r, c = np.nonzero(xn)
     vals = xn[r, c]

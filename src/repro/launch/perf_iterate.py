@@ -14,9 +14,12 @@ hypothesis -> change -> before -> after chain.
 import argparse
 import json
 
-from repro.config import INPUT_SHAPES, TrainConfig
+from repro.config import INPUT_SHAPES, TPU_V5E, TrainConfig
 from repro.configs import get_config
+from repro.core.cost import analytic_cost
+from repro.core.memory import estimate_memory
 from repro.core.planner import compile_plan
+from repro.core.strategies import ExecutionPlan
 from repro.launch.dryrun import lower_combo
 from repro.launch.mesh import mesh_cfg_for
 
@@ -89,11 +92,6 @@ def run_pair(name: str):
     for label, kw in variants:
         plan_override = None
         if "plan_override_cfg" in kw:
-            from repro.core.strategies import ExecutionPlan
-            from repro.core.memory import estimate_memory
-            from repro.core.cost import analytic_cost
-            from repro.config import TPU_V5E
-
             cfg = get_config(arch)
             shp = INPUT_SHAPES[shape]
             mesh_cfg = mesh_cfg_for()

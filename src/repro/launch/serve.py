@@ -1,15 +1,19 @@
-"""Serving launcher: batched greedy decoding with a planner-chosen cache
-layout.
+"""Serving launcher: three configurations of the one ServingEngine.
 
-Single-shot mode (the original path):
+Every mode is the same engine (``repro.runtime.engine.ServingEngine``) —
+the single request-lifecycle API — differing only in how requests are fed
+and consumed:
+
+Single-shot mode (streams the one request's tokens as they decode):
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b-smoke \
         --batch 4 --context 128 --tokens 32
 
-Mixed-shape request-stream mode — exercises the plan cache + dynamic
-recompilation end-to-end (``repro.core.plan_cache``): requests of varying
-(batch, context) round up to power-of-two buckets, steady-state requests
-hit cached compiled plans, and estimate breaches trigger recompilation:
+Mixed-shape request-stream mode — the sequential front door
+(``PlanServer.handle``, itself a submit-and-drain engine adapter):
+requests of varying (batch, context) round up to power-of-two buckets,
+steady-state requests hit cached compiled plans, and estimate breaches
+trigger recompilation:
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b-smoke \
         --stream --requests 24 --tokens 4
@@ -17,37 +21,34 @@ hit cached compiled plans, and estimate breaches trigger recompilation:
     PYTHONPATH=src python -m repro.launch.serve --stream \
         --shapes 2x100,1x40,4x60 --no-cache
 
-Continuous-batching scheduler mode — pending requests coalesce into shared
-shape buckets (one decode batch serves many requests), prefill populates
-each request's KV-cache pool rows (prefill→decode handoff), and arrivals
-are simulated at ``--arrival-rate``. ``--join-mid-decode`` (default on)
-additionally absorbs newly arrived same-bucket requests into free rows of
-in-flight groups between decode steps — token-level continuous batching:
+Continuous-batching mode — the engine driven with simulated arrivals:
+pending requests coalesce into shared shape buckets, prefill populates each
+request's KV-cache pool rows, and ``--join-mid-decode`` (default on)
+absorbs newly arrived same-bucket requests into free rows of in-flight
+groups between decode steps. The new lifecycle knobs ride here: ``--eos-id``
+stamps an end-of-sequence stop condition on every request, and
+``--cancel-after N`` cancels each request after its N-th streamed token —
+both release the request's cache rows/pages the same tick:
 
     PYTHONPATH=src python -m repro.launch.serve --scheduler \
         --requests 24 --arrival-rate 20 --slo-ms 2000
-    # admission-only coalescing (A/B baseline), bounded cache pool:
+    # early termination exercises: EOS stops + client disconnects
     PYTHONPATH=src python -m repro.launch.serve --scheduler \
-        --no-join-mid-decode --pool-max-arenas 2
+        --requests 24 --eos-id 450 --cancel-after 6
 """
 
 from __future__ import annotations
 
 import argparse
 import random
-import time
 
-import jax
 import jax.numpy as jnp
 
-from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
-from repro.core.planner import compile_plan
-from repro.models.model import build_model
+from repro.runtime.engine import ServingEngine
 from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                      simulate_arrivals)
-from repro.runtime.serve_loop import (PlanServer, ServeRequest, greedy_decode,
-                                      make_decode_step)
+from repro.runtime.serve_loop import PlanServer, ServeRequest
 
 DEFAULT_SHAPE_MIX = ((1, 40), (2, 100), (4, 60), (1, 200), (2, 250))
 
@@ -84,11 +85,14 @@ def _build_server(args) -> PlanServer:
 def _request_mix(args):
     mix = _parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPE_MIX
     rng = random.Random(args.seed)
-    return mix, [ServeRequest(*mix[rng.randrange(len(mix))], args.tokens)
+    return mix, [ServeRequest(*mix[rng.randrange(len(mix))], args.tokens,
+                              eos_id=args.eos_id)
                  for _ in range(args.requests)]
 
 
 def serve_stream(args) -> None:
+    """Sequential front door: one submit-and-drain engine pass per request
+    (the plan cache + dynamic recompilation A/B harness)."""
     srv = _build_server(args)
     mix, reqs = _request_mix(args)
     print(f"# stream: {args.requests} requests over shape mix {mix} "
@@ -96,63 +100,81 @@ def serve_stream(args) -> None:
     for i, req in enumerate(reqs):
         out = srv.handle(req)
         flag = " RECOMPILED" if out["recompiled"] else ""
+        fin = ("" if out["finish_reason"] == "length"
+               else f" [{out['finish_reason']}]")
         print(f"req[{i:03d}] batch={req.batch} ctx={req.context} "
-              f"-> bucket={out['bucket']} {out['latency_s'] * 1e3:8.1f}ms{flag}")
+              f"-> bucket={out['bucket']} "
+              f"{out['latency_s'] * 1e3:8.1f}ms{flag}{fin}")
         for r in out["recompile_reasons"]:
             print(f"         reason: {r}")
     print(srv.summary())
 
 
 def serve_scheduled(args) -> None:
-    """Continuous-batching mode: coalesced groups instead of per-request
-    handle() calls, with Poisson arrival simulation."""
+    """Continuous-batching mode: the engine driven with Poisson arrivals
+    through the trace-replay adapter, consuming the token-event stream
+    (and cancelling mid-decode when ``--cancel-after`` says the client
+    hung up)."""
     srv = _build_server(args)
     mix, reqs = _request_mix(args)
-    sched = ContinuousBatchingScheduler(srv, max_group_batch=args.max_group_batch,
-                                        slo_ms=args.slo_ms,
-                                        join_mid_decode=args.join_mid_decode)
+    sched = ContinuousBatchingScheduler(
+        srv, max_group_batch=args.max_group_batch, slo_ms=args.slo_ms,
+        join_mid_decode=args.join_mid_decode)
+    eng = sched.engine
     arrivals = simulate_arrivals(reqs, args.arrival_rate, seed=args.seed)
     print(f"# scheduler: {args.requests} requests over shape mix {mix} "
           f"arrival_rate={args.arrival_rate}/s "
           f"max_group_batch={args.max_group_batch} "
-          f"join_mid_decode={args.join_mid_decode}")
-    for rec in sched.run(arrivals):
+          f"join_mid_decode={args.join_mid_decode} "
+          f"eos_id={args.eos_id} cancel_after={args.cancel_after}")
+
+    def on_event(ev):
+        if (args.cancel_after and ev.token is not None
+                and ev.index + 1 >= args.cancel_after):
+            handle = eng.handles.get(ev.rid)
+            if handle is not None:
+                eng.cancel(handle)
+
+    sched.run(arrivals, on_event=on_event if args.cancel_after else None)
+    for rec in eng.results:
         joined = (f" joined@{rec['joined_at_step']}"
-                  if rec["joined_at_step"] else "")
+                  if rec["joined_at_step"] > 0 else "")
+        fin = ("" if rec["finish_reason"] == "length"
+               else f" [{rec['finish_reason']}]")
         print(f"req[{rec['rid']:03d}] batch={rec['batch']} "
               f"ctx={rec['context']} -> bucket={rec['bucket']} "
               f"group={rec['group_size']}{joined} "
+              f"tokens={rec['tokens'].shape[1]}{fin} "
               f"queue={rec['queue_s'] * 1e3:7.1f}ms "
               f"exec={rec['exec_s'] * 1e3:7.1f}ms")
-    print(sched.summary())
+    print(eng.summary())
 
 
 def serve_once(args) -> None:
-    cfg = get_config(args.arch)
-    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
-    model = build_model(cfg, dtype=dtype)
-
-    n_dev = len(jax.devices())
-    mesh_cfg = MeshConfig(shape=(n_dev,), axis_names=("data",))
-    shape = InputShape("cli", args.context, args.batch, "decode")
-    plan = compile_plan(cfg, shape, mesh_cfg)
-    print(plan.explain())
-
-    params = model.init_params(jax.random.PRNGKey(0))
-    cache = model.init_cache(args.batch, args.context)
-    step = jax.jit(make_decode_step(model, plan.config, mesh_cfg))
-
-    first = jnp.ones((args.batch, 1), jnp.int32)
-    # warmup
-    _ = step(params, cache, first, jnp.int32(0))
-    t0 = time.perf_counter()
-    toks, cache = greedy_decode(model, params, cache, first, 0, args.tokens,
-                                decode_step=step)
-    jax.block_until_ready(toks)
-    dt = time.perf_counter() - t0
-    print(f"decoded {args.tokens} tokens x {args.batch} seqs "
-          f"in {dt:.2f}s = {args.tokens * args.batch / dt:.1f} tok/s")
-    print("sample:", toks[0, :16].tolist())
+    """Single-shot mode: one request submitted into the engine, its tokens
+    printed as the event stream produces them."""
+    srv = _build_server(args)
+    eng = ServingEngine(srv)
+    req = ServeRequest(args.batch, args.context, args.tokens,
+                       eos_id=args.eos_id)
+    handle = eng.submit(req)
+    toks = []
+    t_first = None
+    for ev in handle.stream():
+        if ev.token is None:
+            print(f"\n# finished: {ev.finish_reason}")
+            break
+        if t_first is None:
+            t_first = ev.t
+            print(f"# first token after {t_first * 1e3:.1f}ms")
+        toks.append(int(ev.token[0, 0]))
+        print(f"{toks[-1]}", end=" ", flush=True)
+    rec = handle.result
+    dt = max(1e-9, rec["exec_s"])
+    n = rec["tokens"].shape[1]
+    print(f"decoded {n} tokens x {req.batch} seqs in {dt:.2f}s "
+          f"= {n * req.batch / dt:.1f} tok/s (bucket={rec['bucket']})")
+    print(eng.summary())
 
 
 def main():
@@ -217,6 +239,15 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="scheduler mode: per-request latency objective "
                          "(0 disables SLO accounting)")
+    # request-lifecycle knobs (engine stop conditions + cancellation)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stamp an end-of-sequence stop condition on every "
+                         "request: a row stops at its first eos token and "
+                         "its cache rows/pages free the same tick")
+    ap.add_argument("--cancel-after", type=int, default=0,
+                    help="scheduler mode: cancel each request after its "
+                         "N-th streamed token (simulated client disconnect; "
+                         "0 disables)")
     args = ap.parse_args()
 
     if args.scheduler:

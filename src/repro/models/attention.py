@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops as kops
+
 BLOCKED_THRESHOLD = 4096  # beyond this seq, use the blocked operator
 KV_CHUNK = 1024
 
@@ -36,8 +38,6 @@ def attention(
     b, sq, hq, d = q.shape
     sk = k.shape[1]
     if jax.default_backend() == "tpu":
-        from repro.kernels import ops as kops
-
         out = kops.attention(
             q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3), causal=causal, window=window,

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.config import ModelConfig
+from repro.kernels import ops as kops
 from repro.models import attention as ATT
 from repro.models.common import (NULL_CTX, ShardCtx, causal_conv1d, rms_norm,
                                  rope, swiglu)
@@ -419,8 +420,6 @@ def ssd_block_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
     (x_out, aux, cache) where cache is the decode state after a per-row
     prompt of ``lengths`` tokens: {"state", "conv_x", "conv_b", "conv_c"}
     exactly as :func:`ssd_block_decode` consumes them."""
-    from repro.kernels import ops as kops
-
     b, s, d = x.shape
     h = ctx.seq_gather(rms_norm(x, p["ln"]))
     z, xin_raw, bm_raw, cm_raw, dt = _ssd_pre(cfg, p, h)

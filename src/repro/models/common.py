@@ -15,6 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 from repro.config import MeshConfig
 from repro.core.sharding import spec_for
@@ -46,8 +47,6 @@ class ShardCtx:
         lowers the transition out of a TP region into a reduce-scatter."""
         if self.plan is None or not self.plan.seq_shard_checkpoints:
             return x
-        from jax.sharding import PartitionSpec as P
-
         batch = self.plan.batch_axes or None
         return lax.with_sharding_constraint(x, P(batch, "model", None))
 
@@ -57,8 +56,6 @@ class ShardCtx:
         model axis."""
         if self.plan is None or self.mesh_cfg is None or self.mesh_cfg.num_devices == 1:
             return x
-        from jax.sharding import PartitionSpec as P
-
         batch = self.plan.batch_axes or None
         return lax.with_sharding_constraint(
             x, P(*([batch, "model"] + [None] * (x.ndim - 2))))
@@ -70,8 +67,6 @@ class ShardCtx:
         *weights* every layer (catastrophically worse)."""
         if self.plan is None or not self.plan.seq_shard_checkpoints:
             return x
-        from jax.sharding import PartitionSpec as P
-
         batch = self.plan.batch_axes or None
         return lax.with_sharding_constraint(
             x, P(*([batch] + [None] * (x.ndim - 1))))

@@ -4,6 +4,8 @@ from repro.runtime.train_loop import (init_opt_state, make_train_step,
 from repro.runtime.serve_loop import (PlanServer, ServeRequest,
                                       cache_shardings, greedy_decode,
                                       make_decode_step, make_prefill)
+from repro.runtime.engine import (Clock, RequestHandle, ServingEngine,
+                                  TokenEvent, VirtualClock, WallClock)
 from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                      QueuedRequest, RequestQueue,
                                      simulate_arrivals)
@@ -16,7 +18,9 @@ from repro.runtime.metrics import (LatencyStats, PlanCacheMetrics,
 __all__ = ["make_train_step", "init_opt_state", "opt_state_specs",
            "train_shardings", "batch_specs", "make_decode_step",
            "make_prefill", "cache_shardings", "greedy_decode", "PlanServer",
-           "ServeRequest", "ContinuousBatchingScheduler", "RequestQueue",
+           "ServeRequest", "ServingEngine", "RequestHandle", "TokenEvent",
+           "Clock", "VirtualClock", "WallClock",
+           "ContinuousBatchingScheduler", "RequestQueue",
            "QueuedRequest", "simulate_arrivals", "StepTimer",
            "format_metrics", "LatencyStats", "PlanCacheMetrics",
            "SchedulerMetrics", "scheduler_summary", "serve_summary",

@@ -66,6 +66,8 @@ class PoolMetrics:
     pages_leased: int = 0       # page-grant churn (cumulative)
     pages_freed: int = 0
     pages_denied: int = 0       # joins/admissions refused for lack of pages
+    pages_reclaimed: int = 0    # pages (leased + undrawn reservation) given
+    #                             back by early exits: cancel / eos / stop
     peak_pages: int = 0         # max concurrently committed pages
 
     def as_dict(self) -> Dict[str, float]:
@@ -81,6 +83,7 @@ class PoolMetrics:
             "pages_leased": self.pages_leased,
             "pages_freed": self.pages_freed,
             "pages_denied": self.pages_denied,
+            "pages_reclaimed": self.pages_reclaimed,
             "peak_pages": self.peak_pages,
         }
 
@@ -315,6 +318,11 @@ class CacheArena:
         self._tables_np[row, lp] = got[0]
         self._sync_tables()
         return got[0]
+
+    def reserved_for(self, rows: Sequence[int]) -> int:
+        """Undrawn span-reservation pages still held for ``rows`` — the
+        capacity an early exit hands back without it ever being leased."""
+        return sum(self._row_reserved.get(r, 0) for r in rows)
 
     def release_row_pages(self, rows: Sequence[int]) -> int:
         """Return rows' pages (and outstanding reservations) to the
@@ -582,6 +590,28 @@ class KVCachePool:
                 self.metrics.rows_reused += n
         return rows
 
+    def admit_request_rows(self, arena: CacheArena, n_rows: int, *,
+                           prompt: int, span: int, eager: bool = False,
+                           where: str = "admit_request_rows") -> List[int]:
+        """The one paged-row admission sequence: lease ``n_rows`` rows and
+        commit each one's paging state (prompt-covering pages now, span
+        reservation for the rest — everything with ``eager``). Every
+        admission path goes through here; the PR-4 recycled-arena ``zero=``
+        leak was exactly this sequence drifting between ``PlanServer.handle``
+        and the scheduler. A ``None`` row lease means admission accounting
+        upstream (free-row check, join predicate) is out of sync with the
+        arena — fail loudly with context instead of letting a ``TypeError``
+        surface deep inside the caller."""
+        rows = self.alloc_rows(arena, n_rows)
+        if rows is None:
+            raise RuntimeError(
+                f"KV pool row invariant violated in {where}: request needs "
+                f"{n_rows} rows but arena {arena.batch}x{arena.seq} has only "
+                f"{arena.rows_free} free ({arena.rows_used} leased)")
+        for r in rows:
+            self.admit_row(arena, r, prompt=prompt, span=span, eager=eager)
+        return rows
+
     def admit_row(self, arena: CacheArena, row: int, *, prompt: int,
                   span: int, eager: bool = False) -> None:
         """Commit a leased row's pages: lease the prompt-covering pages now
@@ -613,9 +643,18 @@ class KVCachePool:
             self.metrics.peak_pages = max(self.metrics.peak_pages,
                                           self.pages_live())
 
-    def free_rows(self, arena: CacheArena, rows: Sequence[int]) -> None:
+    def free_rows(self, arena: CacheArena, rows: Sequence[int], *,
+                  early: bool = False) -> None:
+        """Return rows (and their pages + undrawn span reservation) to the
+        arena. ``early``: the tenant exited before its full span — cancel /
+        eos / stop-sequence — so the released capacity is *reclaimed*
+        headroom the byte budget and join admission see the same tick."""
         arena.free_rows(rows)
-        self.metrics.pages_freed += arena.release_row_pages(rows)
+        undrawn = arena.reserved_for(rows) if early else 0
+        freed = arena.release_row_pages(rows)
+        self.metrics.pages_freed += freed
+        if early:
+            self.metrics.pages_reclaimed += freed + undrawn
 
     def release(self, arena: CacheArena) -> None:
         """Return a leased arena to the free pool (rows need not be freed

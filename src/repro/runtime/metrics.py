@@ -115,11 +115,17 @@ class SchedulerMetrics:
     peak_resident: int = 0          # max concurrently in-flight requests
     batch_slots_used: int = 0       # sum of member request batches
     batch_slots_total: int = 0      # sum of group batch-bucket capacities
+    cancelled: int = 0              # requests terminated by cancel()
+    early_exits: int = 0            # completed before max_tokens (eos/stop)
     slo_met: int = 0
     slo_missed: int = 0
     queue_latency: LatencyStats = field(default_factory=LatencyStats)
     exec_latency: LatencyStats = field(default_factory=LatencyStats)
     total_latency: LatencyStats = field(default_factory=LatencyStats)
+    # streaming-consumer latencies: admission -> first token, and the gap
+    # between consecutive token events of one request
+    ttft_latency: LatencyStats = field(default_factory=LatencyStats)
+    itl_latency: LatencyStats = field(default_factory=LatencyStats)
 
     @property
     def bucket_fill(self) -> float:
@@ -154,6 +160,16 @@ class SchedulerMetrics:
         fragmentation benchmark gates on this)."""
         self.peak_resident = max(self.peak_resident, live_requests)
 
+    def observe_first_token(self, ttft_s: float) -> None:
+        """Time-to-first-token: request admission to its first TokenEvent
+        (the latency a streaming consumer actually perceives)."""
+        self.ttft_latency.record(ttft_s)
+
+    def observe_token_gap(self, gap_s: float) -> None:
+        """Inter-token latency: gap between consecutive token events of
+        one request (steady-state streaming cadence)."""
+        self.itl_latency.record(gap_s)
+
     def observe_request(self, queue_s: float, exec_s: float) -> None:
         self.completed += 1
         total = queue_s + exec_s
@@ -178,6 +194,14 @@ class SchedulerMetrics:
                 f"p95={self.queue_latency.percentile(95) * ms:.1f}ms  "
                 f"exec p50={self.exec_latency.percentile(50) * ms:.1f}ms "
                 f"p95={self.exec_latency.percentile(95) * ms:.1f}ms")
+        if self.ttft_latency.count:
+            line += (f"  |  ttft p50={self.ttft_latency.percentile(50) * ms:.1f}ms "
+                     f"p95={self.ttft_latency.percentile(95) * ms:.1f}ms  "
+                     f"itl p50={self.itl_latency.percentile(50) * ms:.1f}ms "
+                     f"p95={self.itl_latency.percentile(95) * ms:.1f}ms")
+        if self.cancelled or self.early_exits:
+            line += (f"  |  cancelled={self.cancelled} "
+                     f"early_exits={self.early_exits}")
         if self.slo_s > 0:
             line += (f"  |  slo<{self.slo_s * ms:.0f}ms: "
                      f"met={self.slo_met} missed={self.slo_missed} "
@@ -200,8 +224,8 @@ def pool_summary(pool) -> str:
     if getattr(pool, "paged", False):
         line += (f"\nkv_pages: size={pool.page_size} "
                  f"leased={m.pages_leased} freed={m.pages_freed} "
-                 f"denied={m.pages_denied} peak={m.peak_pages} "
-                 f"live={pool.pages_live()} "
+                 f"denied={m.pages_denied} reclaimed={m.pages_reclaimed} "
+                 f"peak={m.peak_pages} live={pool.pages_live()} "
                  f"frag={1.0 - pool.slot_utilization():.2f}")
     return line
 

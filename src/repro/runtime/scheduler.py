@@ -1,251 +1,43 @@
-"""Continuous-batching request scheduler on top of :class:`PlanServer`.
+"""Continuous-batching scheduler — now a trace-replay adapter over
+:class:`~repro.runtime.engine.ServingEngine`.
 
 The plan cache (PR 1) made steady-state serving cheap *per request*; the
-coalescing scheduler (PR 2) made it cheap *per token* by filling each shape
-bucket's batch dimension with real requests. This revision makes batching
-*token-level*: groups decode over rows of a shared
-:class:`~repro.runtime.kv_cache.KVCachePool` arena, prefill hands each
-row's populated cache straight to decode (no zero-cache restart), and —
-with ``join_mid_decode`` — newly arrived same-bucket requests are absorbed
-into the free rows of **in-flight** groups between decode steps, each row
-carrying its own position (true continuous batching, the serving-side
-analogue of SystemML's parfor batching argument).
+coalescing scheduler (PR 2) made it cheap *per token*; the KV pool (PR 3/4)
+made batching token-level over paged arenas. PR 5 moved the whole request
+lifecycle — admission, mid-decode joins, group formation, decode ticks,
+token streaming, cancellation, stop conditions — into the engine, so this
+module keeps only what is specific to *offline trace replay*: feed a
+pre-sorted ``(arrival_s, request)`` trace into a live engine against a
+virtual clock that skips idle gaps, and collect the completion records.
 
-Mechanics:
-
-- :class:`RequestQueue` admits :class:`ServeRequest`\\ s asynchronously
-  (each stamped with an arrival time) and coalesces compatible pending
-  requests — same power-of-two bucket over ``context + new_tokens`` so a
-  request's cache rows cover its whole decode — into a shared *group*.
-- :class:`ContinuousBatchingScheduler` per tick: admit due arrivals, join
-  pending requests into free rows of active groups (mid-decode, prefilled
-  at their own position), prefill at most one newly coalesced group (plans
-  from the shared :class:`~repro.core.plan_cache.PlanCache`), then advance
-  every active group by one decode step. Groups only form when the cache
-  pool can lease an arena — a budgeted pool backpressures new groups while
-  joins keep absorbing work into rows that are already resident.
-- Per-request queueing vs. execution latency, SLO attainment, join counts
-  and pool occupancy land in
-  :class:`~repro.runtime.metrics.SchedulerMetrics` / ``scheduler_summary``.
-
-Arrivals are simulated against a virtual clock that never runs slower
-than the real one: execution timing is measured, idle gaps between
-arrivals are skipped instead of slept through.
+:class:`RequestQueue` / :class:`QueuedRequest` (bucket-aware head-of-line
+fair coalescing) live in ``repro.runtime.engine`` now and are re-exported
+here for compatibility — the engine is their real home because *every*
+serving front door admits through them.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+import random
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-
-from repro.config import InputShape
-from repro.core.plan_cache import BucketPolicy, CacheEntry, bucket_pow2
-from repro.runtime.kv_cache import CacheArena
+from repro.runtime.engine import (Clock, QueuedRequest,  # noqa: F401
+                                  RequestQueue, ServingEngine, VirtualClock)
 from repro.runtime.metrics import SchedulerMetrics
 from repro.runtime.serve_loop import PlanServer, ServeRequest
 
 
-@dataclass
-class QueuedRequest:
-    """One admitted request plus its lifecycle timestamps (virtual clock)."""
-
-    rid: int
-    req: ServeRequest
-    arrival_s: float
-    start_s: float = -1.0        # prefill began (group start or mid-decode join)
-    finish_s: float = -1.0       # last requested token decoded
-
-    @property
-    def queue_s(self) -> float:
-        return max(0.0, self.start_s - self.arrival_s)
-
-    @property
-    def exec_s(self) -> float:
-        return max(0.0, self.finish_s - self.start_s)
-
-    @property
-    def total_s(self) -> float:
-        return max(0.0, self.finish_s - self.arrival_s)
-
-
-class RequestQueue:
-    """FIFO admission with bucket-aware coalescing.
-
-    Buckets are over ``context + new_tokens`` — the whole cache span a
-    request occupies — so a context landing exactly on a power-of-two
-    boundary still gets rows for every token it will generate.
-
-    ``next_group`` is deliberately head-of-line fair: the *oldest* pending
-    request picks the bucket, and only same-bucket requests may join its
-    group (in arrival order, until the group's batch capacity is full). A
-    popular bucket can therefore never starve an unpopular one — it just
-    rides along whenever its own head reaches the front.
-    """
-
-    def __init__(self, policy: BucketPolicy = BucketPolicy(),
-                 max_group_batch: int = 8):
-        if max_group_batch < 1:
-            raise ValueError("max_group_batch must be >= 1")
-        self.policy = policy
-        self.max_group_batch = max_group_batch
-        self._pending: List[QueuedRequest] = []
-        self._next_rid = 0
-
-    def __len__(self) -> int:
-        return len(self._pending)
-
-    @property
-    def pending(self) -> Tuple[QueuedRequest, ...]:
-        return tuple(self._pending)
-
-    def seq_bucket(self, req: ServeRequest) -> int:
-        return bucket_pow2(req.context + req.new_tokens, self.policy.min_seq)
-
-    def admit(self, req: ServeRequest, arrival_s: float = 0.0) -> QueuedRequest:
-        qr = QueuedRequest(rid=self._next_rid, req=req, arrival_s=arrival_s)
-        self._next_rid += 1
-        self._pending.append(qr)
-        return qr
-
-    def next_group(self) -> List[QueuedRequest]:
-        """Pop the next coalesced group (empty list if nothing pending).
-
-        The head-of-line request always joins (even if its batch alone
-        exceeds ``max_group_batch`` — it must be served eventually); later
-        same-bucket requests fill the remaining batch slots in FIFO order,
-        skipping any too big for the space left.
-        """
-        if not self._pending:
-            return []
-        head = self._pending[0]
-        sb = self.seq_bucket(head.req)
-        group: List[QueuedRequest] = [head]
-        used = head.req.batch
-        for qr in self._pending[1:]:
-            if self.seq_bucket(qr.req) != sb:
-                continue
-            if used + qr.req.batch > self.max_group_batch:
-                continue
-            group.append(qr)
-            used += qr.req.batch
-        for qr in group:
-            self._pending.remove(qr)
-        return group
-
-    def requeue_front(self, members: Sequence[QueuedRequest]) -> None:
-        """Return a popped group to the queue (pool refused the arena
-        lease), merging by *arrival order* — not wholesale at the front.
-        A refused group is its head plus same-bucket riders popped from
-        deep in the queue; reinserting the riders ahead of older
-        other-bucket requests would let them jump the line and silently
-        break ``next_group``'s head-of-line fairness (``_pending[0]`` must
-        stay the globally oldest pending request)."""
-        self._pending = sorted(self._pending + list(members),
-                               key=lambda qr: (qr.arrival_s, qr.rid))
-
-    def take_joinable(self, seq_bucket: int, max_rows: int,
-                      fits=None) -> List[QueuedRequest]:
-        """Pop pending same-bucket requests that fit in ``max_rows`` free
-        arena rows, strictly FIFO *within the bucket*: scanning stops at
-        the first same-bucket request that does not fit, so later narrow
-        arrivals can never leapfrog a wide head of their own bucket forever
-        (the no-starvation guarantee extends to mid-decode joins).
-
-        ``fits(qr)``: extra admission predicate (free cache pages, byte
-        budget); it may track cumulative commitments across accepted
-        candidates — it is called once per candidate, in scan order, and a
-        False return stops the scan like an unfitting batch does."""
-        taken: List[QueuedRequest] = []
-        room = max_rows
-        for qr in list(self._pending):
-            if room <= 0:
-                break
-            if self.seq_bucket(qr.req) != seq_bucket:
-                continue
-            if qr.req.batch > room:
-                break
-            if fits is not None and not fits(qr):
-                break
-            taken.append(qr)
-            room -= qr.req.batch
-            self._pending.remove(qr)
-        return taken
-
-
-class _Clock:
-    """Virtual clock: real elapsed time plus skipped idle gaps."""
-
-    def __init__(self):
-        self._t0 = time.perf_counter()
-        self._skew = 0.0
-
-    def now(self) -> float:
-        return time.perf_counter() - self._t0 + self._skew
-
-    def advance_to(self, t: float) -> None:
-        self._skew += max(0.0, t - self.now())
-
-
-@dataclass
-class _Member:
-    """One request's tenancy inside a group: its arena rows, when it
-    joined (in decode steps), and its prefill-produced first token."""
-
-    qr: QueuedRequest
-    rows: List[int]
-    join_step: int
-    first: Any                   # (batch, 1) — token #1, from prefill
-    base_pos: int = 0            # decode start position (prompt len / 0)
-    done: bool = False
-
-    @property
-    def req(self) -> ServeRequest:
-        return self.qr.req
-
-
-@dataclass
-class _Group:
-    """One decode batch in flight over a leased cache-pool arena. Rows sit
-    at per-row positions, so members at different generation depths (and
-    mid-decode joiners) share the one jitted decode step."""
-
-    entry: CacheEntry                 # decode plan for the group's bucket
-    arena: CacheArena
-    context: int                      # max member span (stats naming)
-    members: List[_Member]
-    toks: Any                         # (batch_bucket, 1) next decode inputs
-    pos: Any                          # (batch_bucket,) int32 per-row positions
-    steps_done: int = 0
-    peak_rows: int = 0                # max *concurrent* leased rows observed
-    decoded: List[Any] = field(default_factory=list)
-
-    @property
-    def done(self) -> bool:
-        return all(m.done for m in self.members)
-
-    @property
-    def seq_bucket(self) -> int:
-        return self.entry.key.seq_bucket
-
-    @property
-    def total_batch(self) -> int:
-        return sum(m.req.batch for m in self.members)
-
-
 class ContinuousBatchingScheduler:
-    """Drives a :class:`PlanServer` with coalesced groups instead of
-    one-request-at-a-time ``handle`` calls.
+    """Replays an arrival trace through a :class:`ServingEngine`.
 
-    Both plan families come from the server's single :class:`PlanCache`:
-    ``kind="prefill"`` entries for the batched prompt pass (which now also
-    returns the populated cache rows), ``kind="decode"`` entries for the
-    shared-arena generation steps. ``join_mid_decode`` turns on token-level
-    continuous batching: pending same-bucket requests are prefilled and
-    written into free rows of in-flight groups between decode steps.
+    Kept as the batch-mode front door (benches, offline evaluation): the
+    engine itself serves *online* traffic — ``submit`` at any time,
+    ``stream``/``events`` for tokens, ``cancel`` for early exits — while
+    this adapter preserves the PR-2 contract: ``run(arrivals)`` consumes a
+    whole trace and returns one completion record per request. Observable
+    results are unchanged; the tick structure (admit due arrivals → joins →
+    form at most one group → one decode step per active group) now lives in
+    ``ServingEngine.step``.
     """
 
     def __init__(
@@ -256,300 +48,73 @@ class ContinuousBatchingScheduler:
         slo_ms: float = 0.0,
         queue: Optional[RequestQueue] = None,
         join_mid_decode: bool = True,
+        clock: Optional[Clock] = None,
     ):
-        self.server = server
-        self.queue = queue or RequestQueue(server.policy, max_group_batch)
-        self.metrics = SchedulerMetrics(slo_s=slo_ms / 1e3)
-        self.join_mid_decode = join_mid_decode
-        self.active: List[_Group] = []
-        self.results: List[Dict[str, Any]] = []
-        # requests already counted in pages_denied — the join predicate runs
-        # every tick, and a retried candidate must not re-count as a denial
-        self._page_denied_rids: set = set()
+        self.engine = ServingEngine(
+            server, max_group_batch=max_group_batch, slo_ms=slo_ms,
+            queue=queue, join_mid_decode=join_mid_decode,
+            clock=clock or VirtualClock())
 
-    # -- member lifecycle --------------------------------------------------
-    def _alloc_rows_checked(self, arena, qr: QueuedRequest,
-                            where: str) -> List[int]:
-        """Lease a member's arena rows; a ``None`` return means the
-        admission accounting upstream (free-row check, join predicate) is
-        out of sync with the arena — fail loudly with context instead of
-        letting a ``TypeError`` surface deep inside ``_admit_members``."""
-        rows = self.server.pool.alloc_rows(arena, qr.req.batch)
-        if rows is None:
-            raise RuntimeError(
-                f"KV pool row invariant violated in {where}: request "
-                f"rid={qr.rid} needs {qr.req.batch} rows but arena "
-                f"{arena.batch}x{arena.seq} has only {arena.rows_free} free "
-                f"({arena.rows_used} leased)")
-        return rows
+    # engine views (the adapter adds no state of its own) ------------------
+    @property
+    def server(self) -> PlanServer:
+        return self.engine.server
 
-    def _admit_members(self, group: _Group, queued: List[QueuedRequest],
-                       rows_per_member: List[List[int]], join_step: int,
-                       now: float) -> List[_Member]:
-        """Prefill ``queued`` as one batch, write their populated cache
-        rows into the group's arena, and seat them at their own positions.
-        Used both at group start (join_step 0) and for mid-decode joins."""
-        srv = self.server
-        handoff = srv.model.supports_handoff
-        total_batch = sum(qr.req.batch for qr in queued)
-        span = max(srv.request_span(qr.req) for qr in queued)
-        rows_flat = [r for rows in rows_per_member for r in rows]
+    @property
+    def queue(self) -> RequestQueue:
+        return self.engine.queue
 
-        # commit pages before the handoff scatter lands on them: each row
-        # leases its prompt-covering pages now and reserves its span
-        for qr, rows in zip(queued, rows_per_member):
-            for r in rows:
-                srv.pool.admit_row(group.arena, r,
-                                   prompt=qr.req.context if handoff else 0,
-                                   span=srv.request_span(qr.req))
+    @property
+    def metrics(self) -> SchedulerMetrics:
+        return self.engine.metrics
 
-        lengths_rows = []
-        for qr in queued:
-            qr.start_s = now
-            # once admitted (group start or join), a page denial is history
-            self._page_denied_rids.discard(qr.rid)
-            lengths_rows += [qr.req.context] * qr.req.batch
-        entry = srv.prefill_entry(total_batch, span)
-        pb = entry.key.batch_bucket
-        lengths = jnp.asarray(
-            lengths_rows + [1] * (pb - len(lengths_rows)), jnp.int32)
-        logits, pkv = srv.run_prefill(entry, lengths=lengths)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        if pkv is not None:
-            srv.pool.write_rows(group.arena, rows_flat, pkv,
-                                src_rows=range(len(rows_flat)))
-            pos_rows = lengths_rows
-        else:  # no handoff for this family: rows decode from zero state —
-            # clear any state a prior tenant of these rows/pages left behind
-            # (mid-decode joiners can inherit rows a completed member freed)
-            if join_step > 0:
-                srv.pool.zero_rows(group.arena, rows_flat)
-            pos_rows = [0] * len(rows_flat)
-        rows_a = jnp.asarray(rows_flat, jnp.int32)
-        group.pos = group.pos.at[rows_a].set(jnp.asarray(pos_rows, jnp.int32))
-        group.toks = group.toks.at[rows_a].set(first[: len(rows_flat)])
+    @property
+    def join_mid_decode(self) -> bool:
+        return self.engine.join_mid_decode
 
-        members = []
-        group.peak_rows = max(group.peak_rows, group.arena.rows_used)
-        row_i = 0
-        for qr, rows in zip(queued, rows_per_member):
-            m = _Member(qr=qr, rows=rows, join_step=join_step,
-                        first=first[row_i: row_i + qr.req.batch],
-                        base_pos=qr.req.context if (handoff and pkv is not None)
-                        else 0)
-            row_i += qr.req.batch
-            members.append(m)
-            group.members.append(m)
-            # the prefill token already is token #1: a 1-token request
-            # completes at admission, before any decode step
-            if qr.req.new_tokens <= 1:
-                self._complete(m, group, now)
-        return members
+    @property
+    def active(self):
+        return self.engine.active
 
-    def _start_group(self, queued: List[QueuedRequest],
-                     now: float) -> Optional[_Group]:
-        srv = self.server
-        handoff = srv.model.supports_handoff
-        total_batch = sum(qr.req.batch for qr in queued)
-        span = max(srv.request_span(qr.req) for qr in queued)
-        entry = srv.decode_entry(total_batch, span)
-        b, s = entry.key.batch_bucket, entry.key.seq_bucket
-        # page-exact admission demand: what this group's members commit
-        # (rows + span pages), not the arena's bucket-shaped capacity
-        demand = sum(srv.pool.member_bytes(s, qr.req.batch,
-                                           srv.request_span(qr.req))
-                     for qr in queued) if srv.pool.paged else None
-        # the pool is the single owner of cache construction; force the
-        # lease when nothing is in flight so progress is always possible.
-        # A recycled arena may hold a previous tenant's K/V and recurrent
-        # state: families without a prefill handoff decode from what they
-        # assume is a zero cache, so their lease must be zeroed (the
-        # handoff write overwrites admitted rows wholesale — no zero needed)
-        arena = srv.pool.acquire(b, s, zero=not handoff,
-                                 force=not self.active,
-                                 demand_bytes=demand)
-        if arena is None:
-            return None
-        group = _Group(
-            entry=entry, arena=arena,
-            context=max(qr.req.context for qr in queued),
-            members=[],
-            toks=jnp.ones((b, 1), jnp.int32),
-            pos=jnp.zeros((b,), jnp.int32),
-        )
-        rows_per_member = [
-            self._alloc_rows_checked(arena, qr, "_start_group")
-            for qr in queued]
-        self._admit_members(group, queued, rows_per_member, 0, now)
-        self.metrics.observe_group([qr.req.batch for qr in queued], b)
-        return group
+    @property
+    def results(self) -> List[Dict[str, Any]]:
+        return self.engine.results
 
-    def _try_joins(self, group: _Group, clock: _Clock) -> None:
-        """Absorb pending same-bucket requests into the group's free arena
-        rows — and free cache *pages*, which is the real admission unit on
-        a paged pool — prefilled at their own positions (token-level
-        continuous batching). Joiners skip the line only for capacity the
-        head-of-line request could not use anyway — its own group still
-        forms through ``next_group`` as soon as the pool can lease an
-        arena."""
-        srv = self.server
-        arena = group.arena
-        free = arena.rows_free
-        if not free:
-            return
-        fits = None
-        if srv.pool.paged:
-            state = {"pages": arena.allocator.available if arena.n_pages
-                     else None,
-                     "bytes": srv.pool.bytes_room()}
-
-            def fits(qr):
-                span = srv.request_span(qr.req)
-                pages = arena.span_pages(span) * qr.req.batch
-                nbytes = srv.pool.member_bytes(arena.seq, qr.req.batch, span)
-                if (state["pages"] is not None and pages > state["pages"]) \
-                        or nbytes > state["bytes"]:
-                    # count each backpressured *request* once, not once per
-                    # tick it stays refused
-                    if qr.rid not in self._page_denied_rids:
-                        self._page_denied_rids.add(qr.rid)
-                        srv.pool.metrics.pages_denied += 1
-                    return False
-                if state["pages"] is not None:
-                    state["pages"] -= pages
-                state["bytes"] -= nbytes
-                self._page_denied_rids.discard(qr.rid)
-                return True
-
-        queued = self.queue.take_joinable(group.seq_bucket, free, fits=fits)
-        if not queued:
-            return
-        rows_per_member = [
-            self._alloc_rows_checked(arena, qr, "_try_joins")
-            for qr in queued]
-        members = self._admit_members(group, queued, rows_per_member,
-                                      group.steps_done, clock.now())
-        self.metrics.observe_joins([m.req.batch for m in members])
-
-    def _decode_tick(self, group: _Group, clock: _Clock) -> None:
-        srv = self.server
-        if srv.pool.paged:
-            # grant the page covering each live row's next write position
-            # (on-demand paging: drawn from the admission-time reservation,
-            # so this can never fail mid-decode)
-            for m in group.members:
-                if not m.done:
-                    wpos = m.base_pos + (group.steps_done - m.join_step)
-                    srv.pool.ensure_decode_slots(group.arena, m.rows, wpos)
-            logits, group.arena.cache = group.entry.step_fn(
-                srv.params, group.arena.cache, group.toks, group.pos,
-                group.arena.tables)
-        else:
-            logits, group.arena.cache = group.entry.step_fn(
-                srv.params, group.arena.cache, group.toks, group.pos)
-        group.toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        jax.block_until_ready(group.toks)
-        group.decoded.append(group.toks)
-        group.pos = group.pos + 1
-        group.steps_done += 1
-        now = clock.now()
-        for m in group.members:
-            # the prefill token is token #1, so a member needs
-            # new_tokens - 1 decode steps after its join
-            if not m.done and (group.steps_done - m.join_step
-                               >= m.req.new_tokens - 1):
-                self._complete(m, group, now)
-
-    def _complete(self, m: _Member, group: _Group, now: float) -> None:
-        m.done = True
-        m.qr.finish_s = now
-        self.metrics.observe_request(m.qr.queue_s, m.qr.exec_s)
-        rows = jnp.asarray(m.rows, jnp.int32)
-        steps = group.decoded[m.join_step: m.join_step + m.req.new_tokens - 1]
-        toks = jnp.concatenate(
-            [m.first] + [jnp.take(t, rows, axis=0) for t in steps], axis=1)
-        self.results.append({
-            "rid": m.qr.rid,
-            "batch": m.req.batch,
-            "context": m.req.context,
-            "bucket": (group.entry.key.batch_bucket,
-                       group.entry.key.seq_bucket),
-            "group_size": len(group.members),
-            "joined_at_step": m.join_step,
-            "tokens": toks,
-            "queue_s": m.qr.queue_s,
-            "exec_s": m.qr.exec_s,
-            "total_s": m.qr.total_s,
-        })
-        # freed rows become mid-decode join capacity immediately
-        self.server.pool.free_rows(group.arena, m.rows)
-
-    def _retire_group(self, group: _Group) -> None:
-        """Observed runtime statistics — including the cache pool's live
-        bytes — feed dynamic recompilation exactly as in the sequential
-        path; then the arena goes back to the pool for reuse."""
-        srv = self.server
-        # the observed batch is the peak *concurrent* row usage — members
-        # joining rows another member freed never widened the batch
-        shape = InputShape(
-            f"group_{group.peak_rows}x{group.context}",
-            group.seq_bucket, group.peak_rows, "decode")
-        stats = srv.observed_stats(group.entry, shape, group.toks)
-        srv.observe(group.entry.key, stats)
-        srv.pool.release(group.arena)
-
-    # -- main loop ---------------------------------------------------------
-    def run(self, arrivals: Iterable[Tuple[float, ServeRequest]]
-            ) -> List[Dict[str, Any]]:
+    # ----------------------------------------------------------------------
+    def run(self, arrivals: Iterable[Tuple[float, ServeRequest]],
+            on_event=None) -> List[Dict[str, Any]]:
         """Serve a stream of ``(arrival_s, request)`` pairs to completion.
 
-        Returns one record per request (completion order). Tick structure:
-        admit due arrivals → join pending requests into free rows of active
-        groups (mid-decode) → coalesce + prefill at most one new group
-        (pool permitting) → one decode step for every active group.
+        Returns one record per request (completion order). Arrivals are
+        submitted into the live engine when due on its clock; between
+        arrivals the engine ticks, and an idle engine skips ahead to the
+        next arrival instead of sleeping (virtual clock).
+
+        ``on_event(ev)``: optional per-:class:`TokenEvent` callback, called
+        for every event each tick emits — the hook streaming consumers and
+        cancellation drivers (``serve.py --cancel-after``) use without
+        re-implementing this replay loop.
         """
+        eng = self.engine
         todo = sorted(arrivals, key=lambda a: a[0])
-        clock = _Clock()
         idx = 0
-        while idx < len(todo) or len(self.queue) or self.active:
-            now = clock.now()
+        while idx < len(todo) or not eng.idle:
+            now = eng.clock.now()
             while idx < len(todo) and todo[idx][0] <= now:
-                self.queue.admit(todo[idx][1], todo[idx][0])
-                self.metrics.admitted += 1
+                eng.submit(todo[idx][1], arrival_s=todo[idx][0])
                 idx += 1
-            if not self.active and not len(self.queue):
+            if eng.idle:
                 # idle: skip ahead to the next arrival instead of sleeping
-                clock.advance_to(todo[idx][0])
+                eng.clock.advance_to(todo[idx][0])
                 continue
-            if self.join_mid_decode:
-                for group in self.active:
-                    self._try_joins(group, clock)
-            if len(self.queue):
-                members = self.queue.next_group()
-                if members:
-                    group = self._start_group(members, clock.now())
-                    if group is None:
-                        # pool budget exhausted: requests wait (or join)
-                        self.queue.requeue_front(members)
-                    else:
-                        self.active.append(group)
-            self.metrics.observe_resident(
-                sum(1 for g in self.active for m in g.members if not m.done))
-            for group in list(self.active):
-                if not group.done:
-                    self._decode_tick(group, clock)
-                if group.done:
-                    self._retire_group(group)
-                    self.active.remove(group)
-        return self.results
+            events = eng.step()
+            if on_event is not None:
+                for ev in events:
+                    on_event(ev)
+        return eng.results
 
     def summary(self) -> str:
-        from repro.runtime.metrics import scheduler_summary
-        # the scheduler's own total latency, not server.latency — handle()
-        # is never called on this path, so the server accumulator is empty
-        return scheduler_summary(self.metrics, self.server.metrics,
-                                 self.metrics.total_latency,
-                                 pool=self.server.pool)
+        return self.engine.summary()
 
 
 def simulate_arrivals(
@@ -561,8 +126,6 @@ def simulate_arrivals(
     (exponential inter-arrival gaps, seeded). ``rate_per_s <= 0`` means a
     closed burst: everything arrives at t=0 (maximal coalescing pressure).
     """
-    import random
-
     if rate_per_s <= 0:
         return [(0.0, r) for r in requests]
     rng = random.Random(seed)

@@ -13,8 +13,9 @@ back into the compiler when they breach the plan's compile-time estimates.
 
 from __future__ import annotations
 
+import itertools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -29,6 +30,9 @@ from repro.core.planner import PlanCompiler
 from repro.core.sharding import tree_specs
 from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats
 from repro.models.common import ShardCtx
+from repro.models.model import build_model
+from repro.runtime.engine import ServingEngine, WallClock
+from repro.runtime.kv_cache import KVCachePool
 from repro.runtime.metrics import LatencyStats, serve_summary
 
 
@@ -105,14 +109,28 @@ def greedy_decode(model, params, cache, first_token, start_pos, num_tokens,
 # ===========================================================================
 
 
+_NEXT_RID = itertools.count()
+
+
 @dataclass(frozen=True)
 class ServeRequest:
     """One decode request: ``batch`` sequences with ``context`` cache slots,
-    generating ``new_tokens`` tokens greedily."""
+    generating up to ``new_tokens`` tokens greedily.
+
+    ``rid`` is stamped at construction (process-wide monotone counter), so
+    engine handles, scheduler results, and metrics all key on the same id —
+    it is no longer minted at queue admission. Stop conditions end a
+    request before ``new_tokens``: ``eos_id`` stops a row at its first
+    end-of-sequence token, ``stop`` is a tuple of token-id sequences any of
+    which terminates a row when its output ends with one (a request
+    finishes when every row has stopped)."""
 
     batch: int
     context: int
     new_tokens: int = 8
+    eos_id: Optional[int] = None
+    stop: Tuple[Tuple[int, ...], ...] = ()
+    rid: int = field(default_factory=lambda: next(_NEXT_RID))
 
 
 def _tree_bytes(tree) -> float:
@@ -159,9 +177,6 @@ class PlanServer:
         pool_max_bytes: float = 0.0,
         page_size: int = 64,
     ):
-        from repro.models.model import build_model
-        from repro.runtime.kv_cache import KVCachePool
-
         self.cfg = cfg
         self.mesh_cfg = mesh_cfg or MeshConfig(
             shape=(len(jax.devices()),), axis_names=("data",))
@@ -193,6 +208,7 @@ class PlanServer:
         # the prefill-produced first token opens the output; False keeps the
         # PR-1 decode-only request shape. The scheduler always prefills.
         self.prefill = prefill
+        self._engine: Optional[ServingEngine] = None
 
     # ------------------------------------------------------------------
     def _build_step(self, plan: ExecutionPlan):
@@ -317,74 +333,56 @@ class PlanServer:
 
     # ------------------------------------------------------------------
     def handle(self, req: ServeRequest) -> Dict[str, Any]:
-        """Serve one request; returns tokens + per-request accounting.
+        """Serve one request synchronously; returns tokens + accounting.
 
-        With ``prefill=True`` the prompt pass populates the request's cache
-        rows (prefill→decode handoff): decode step 0 consumes the prefill-
-        produced token *at the prompt's position*, that token opens the
-        output, and no token is recomputed against an empty cache.
+        This is a thin submit-and-drain adapter over
+        :class:`~repro.runtime.engine.ServingEngine` — the one request-
+        lifecycle implementation — configured for the sequential shape:
+        wall-clock time, no mid-decode joins, whole-span page commitment at
+        admission. With ``prefill=True`` the prompt pass populates the
+        request's cache rows (prefill→decode handoff): decode step 0
+        consumes the prefill-produced token *at the prompt's position*,
+        that token opens the output, and no token is recomputed against an
+        empty cache. Stop conditions (``eos_id`` / ``stop``) and the
+        engine's cancellation path apply here too.
         """
+        if self._engine is None:
+            # count_first: with a handoff the prefill token is output token
+            # #1; enc-dec / modality frontends (and the decode-only PR-1
+            # shape) emit exactly new_tokens decode outputs instead
+            # sync_per_tick=False: nobody streams this request, so the
+            # decode steps dispatch asynchronously (the pre-engine greedy
+            # loop's behaviour) and one block at the end settles the work
+            self._engine = ServingEngine(
+                self, clock=WallClock(), join_mid_decode=False,
+                prefill=self.prefill,
+                count_first=self.prefill and self.model.supports_handoff,
+                eager_pages=True, sync_per_tick=False)
+        eng = self._engine
         t0 = time.perf_counter()
-        span = self.request_span(req)
-        key = self._key_for(req.batch, span, "decode")
-        entry = self._entry_for(key)
-
-        # execute at the bucket shape (requests pad up to the bucket);
-        # cache rows come from the pool — the single owner of construction
-        b, s = key.batch_bucket, key.seq_bucket
-        use_handoff = self.prefill and self.model.supports_handoff
-        arena = self.pool.acquire(b, s, zero=not use_handoff, force=True)
-        if self.pool.paged:
-            # the sequential path occupies every bucket row for the whole
-            # request; commit each row's span pages eagerly (no per-step
-            # on-demand growth to interleave with the greedy loop)
-            rows = self.pool.alloc_rows(arena, b)
-            for r in rows:
-                self.pool.admit_row(arena, r,
-                                    prompt=req.context if use_handoff else 0,
-                                    span=span, eager=True)
-        if use_handoff:
-            lengths = jnp.full((b,), req.context, jnp.int32)
-            first, pkv = self.prefill_first_token(req.batch, span,
-                                                  lengths=lengths)
-            self.pool.write_rows(arena, range(b), pkv)
-            gen, arena.cache = greedy_decode(
-                self.model, self.params, arena.cache, first, lengths,
-                req.new_tokens - 1, decode_step=entry.step_fn,
-                tables=arena.tables)
-            toks = jnp.concatenate([first, gen], axis=1)
-        else:
-            if self.prefill:  # enc-dec / modality frontends: logits only
-                first, _ = self.prefill_first_token(req.batch, span)
-            else:
-                first = jnp.ones((b, 1), jnp.int32)
-            toks, arena.cache = greedy_decode(
-                self.model, self.params, arena.cache, first,
-                jnp.zeros((b,), jnp.int32), req.new_tokens,
-                decode_step=entry.step_fn, tables=arena.tables)
-        jax.block_until_ready(toks)
-
-        shape = InputShape(f"req_{req.batch}x{req.context}",
-                           span, req.batch, "decode")
-        stats = self.observed_stats(entry, shape, toks)
-        refreshed, reasons = self.observe(key, stats)
-        if refreshed is not None:
-            entry = refreshed
-        self.pool.release(arena)
+        handle = eng.submit(req)
+        while handle.result is None and not eng.idle:
+            eng.step()
+        rec = handle.result
+        jax.block_until_ready(rec["tokens"])
         # latency includes any in-request recompilation — that cost is the
         # mechanism under measurement, not overhead to hide
         latency = time.perf_counter() - t0
         self.latency.record(latency)
-        return {
-            "tokens": toks[: req.batch],
+        out = {
+            "tokens": rec["tokens"],
             "latency_s": latency,
-            "bucket": (b, s),
-            "plan": entry.plan,
-            "recompiled": bool(reasons),
-            "recompile_reasons": reasons,
-            "watermark_bytes": stats.watermark_bytes,
-            "pool_bytes": stats.cache_pool_bytes,
+            "bucket": rec["bucket"],
+            "plan": rec["plan"],
+            "recompiled": rec["recompiled"],
+            "recompile_reasons": rec["recompile_reasons"],
+            "watermark_bytes": rec["watermark_bytes"],
+            "pool_bytes": rec["pool_bytes"],
+            "finish_reason": rec["finish_reason"],
+            "rid": req.rid,
         }
+        eng.discard(handle)   # one-shot: don't accumulate engine records
+        return out
 
     # ------------------------------------------------------------------
     def summary(self) -> str:

@@ -13,7 +13,7 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import MeshConfig, TrainConfig
 from repro.core.sharding import spec_for, tree_specs
@@ -134,8 +134,6 @@ def make_train_step(model, plan: PlanConfig, mesh_cfg: MeshConfig,
 def train_shardings(model, plan: PlanConfig, mesh_cfg: MeshConfig,
                     train: TrainConfig, mesh):
     """(param_specs/shardings, opt_specs/shardings) for jit in_shardings."""
-    from jax.sharding import NamedSharding
-
     pspecs = model.param_specs()
     paxes = model.param_axes()
     p_part = tree_specs(pspecs, paxes, plan, mesh_cfg, "param")

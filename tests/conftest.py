@@ -1,4 +1,5 @@
 import os
+import subprocess
 import sys
 
 # Tests run single-device (the dry-run owns the 512-device setup; see
@@ -20,8 +21,6 @@ def multidev_script(body: str, n: int = 8) -> str:
 
 
 def run_multidev(body: str, n: int = 8, timeout: int = 300) -> str:
-    import subprocess
-
     r = subprocess.run(
         [sys.executable, "-c", multidev_script(body, n)],
         capture_output=True, text=True, timeout=timeout,

@@ -2,6 +2,8 @@
 static fixture: while-loop trip-count multiplication, dot FLOPs through
 the symbol table, and collective byte accounting."""
 
+from repro.config import TPU_V5E
+from repro.core.cost import roofline_terms
 from repro.launch import hlo_analysis as H
 
 FIXTURE = """
@@ -74,9 +76,6 @@ def test_shape_bytes_tuple_types():
 
 
 def test_roofline_terms_math():
-    from repro.config import TPU_V5E
-    from repro.core.cost import roofline_terms
-
     t = roofline_terms(197e12, 819e9, 50e9, 1, TPU_V5E, per_chip=True)
     assert abs(t.compute_s - 1.0) < 1e-6
     assert abs(t.memory_s - 1.0) < 1e-6

@@ -11,7 +11,7 @@ from repro.kernels.conv2d_im2col import conv2d_im2col
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
 
@@ -107,8 +107,6 @@ def test_ssd_chunked_ref_matches_sequential():
 def test_ops_dispatch_fallback():
     """On CPU (auto backend) ops fall back to XLA; forcing pallas uses
     interpret mode — both match the oracle (the C7 dispatch contract)."""
-    from repro.kernels import ops
-
     a = jax.random.normal(KEY, (64, 64))
     b = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
     want = ref.matmul_ref(a, b)

@@ -288,18 +288,20 @@ def test_wide_head_not_starved_by_joiners():
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, pool_max_arenas=1)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=8,
                                         join_mid_decode=True)
-    arrivals = [(0.0, ServeRequest(5, 100, 8)),    # leases the only arena
-                (0.001, ServeRequest(5, 100, 4)),  # wide: can't fit 3 rows
-                (0.002, ServeRequest(1, 90, 2)),   # narrow, same bucket
-                (0.003, ServeRequest(1, 92, 2))]
+    reqs = [ServeRequest(5, 100, 8),    # leases the only arena
+            ServeRequest(5, 100, 4),    # wide: can't fit 3 rows
+            ServeRequest(1, 90, 2),     # narrow, same bucket
+            ServeRequest(1, 92, 2)]
+    arrivals = [(0.001 * i, r) for i, r in enumerate(reqs)]
     results = sched.run(arrivals)
     assert len(results) == 4
     # the narrow requests did not leapfrog the wide head mid-decode: no
     # joins happened, and everyone queued behind the head rode the head's
     # own (post-drain) group instead of starting earlier
     assert sched.metrics.joins == 0
-    wide = next(r for r in results if r["rid"] == 1)
-    narrow = [r for r in results if r["rid"] in (2, 3)]
+    wide = next(r for r in results if r["rid"] == reqs[1].rid)
+    narrow = [r for r in results
+              if r["rid"] in (reqs[2].rid, reqs[3].rid)]
     assert wide["group_size"] == 3
     assert all(n["joined_at_step"] == 0 for n in narrow)
     assert all(n["bucket"] == wide["bucket"] for n in narrow)
@@ -328,12 +330,13 @@ def test_mid_decode_join_absorbs_into_free_rows():
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, pool_max_arenas=1)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=8,
                                         join_mid_decode=True)
-    arrivals = [(0.0, ServeRequest(5, 100, 12))] + \
+    head = ServeRequest(5, 100, 12)
+    arrivals = [(0.0, head)] + \
                [(0.001, ServeRequest(1, 90 + 2 * i, 3)) for i in range(3)]
     results = sched.run(arrivals)
     assert len(results) == 4
     assert sched.metrics.joins == 3 and sched.metrics.join_rows == 3
-    joined = [r for r in results if r["rid"] != 0]
+    joined = [r for r in results if r["rid"] != head.rid]
     assert all(r["joined_at_step"] >= 1 for r in joined)
     assert all(r["tokens"].shape == (1, 3) for r in joined)
     # one arena served everything; the head's group never widened past it
@@ -348,13 +351,13 @@ def test_admission_only_waits_for_arena():
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, pool_max_arenas=1)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=8,
                                         join_mid_decode=False)
-    arrivals = [(0.0, ServeRequest(5, 100, 12)),
-                (0.001, ServeRequest(1, 90, 2))]
+    head_req, tail_req = ServeRequest(5, 100, 12), ServeRequest(1, 90, 2)
+    arrivals = [(0.0, head_req), (0.001, tail_req)]
     results = sched.run(arrivals)
     assert len(results) == 2
     assert sched.metrics.joins == 0
-    tail = next(r for r in results if r["rid"] == 1)
-    head = next(r for r in results if r["rid"] == 0)
+    tail = next(r for r in results if r["rid"] == tail_req.rid)
+    head = next(r for r in results if r["rid"] == head_req.rid)
     # the tail could not start before the head finished
     assert tail["queue_s"] >= head["exec_s"] * 0.5
     assert srv.pool.metrics.arenas_denied > 0

@@ -11,6 +11,7 @@ from repro.config import InputShape, TrainConfig, SINGLE_DEVICE_MESH
 from repro.configs import ARCH_IDS, get_config
 from repro.core.planner import compile_plan
 from repro.data import make_batch
+from repro.models import blocks as B_
 from repro.models.model import build_model
 from repro.runtime.train_loop import init_opt_state, make_train_step
 
@@ -100,7 +101,6 @@ def test_rotating_window_decode_matches_windowed_forward():
     full, _ = model.apply(params, toks, window_override=W)
 
     # build a rotating cache by hand: cache seq = W
-    from repro.models import blocks as B_
     ent = {}
     n = cfg.num_layers
     for name, (shape, axes) in B_.attn_cache_spec(cfg, B, W, jnp.float32).items():

@@ -166,13 +166,14 @@ def test_scheduler_mid_decode_joiner_inherits_freed_capacity():
     mid-decode, and its tokens still condition on its own prompt."""
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=8)
+    late = ServeRequest(1, 92, 3)                 # joins the freed row
     arrivals = [(0.0, ServeRequest(7, 100, 12)),
                 (0.0, ServeRequest(1, 90, 2)),    # rides, finishes fast
-                (0.0, ServeRequest(1, 92, 3))]    # joins the freed row
+                (0.0, late)]
     results = sched.run(arrivals)
     assert len(results) == 3
     assert sched.metrics.joins == 1
-    joiner = next(r for r in results if r["rid"] == 2)
+    joiner = next(r for r in results if r["rid"] == late.rid)
     assert joiner["joined_at_step"] >= 1
     seq = [1] * 92
     expect = []
@@ -198,14 +199,15 @@ def test_page_exhaustion_backpressures_join_but_group_ticks():
     # the tail arrives once the head group is in flight (the head's first
     # tick compiles plans, so the virtual clock is far past 0.05 by then):
     # it can only enter via a mid-decode join — which the budget denies
-    arrivals = [(0.00, ServeRequest(3, 100, 8)),  # bucket (4, 128), 1 free row
-                (0.05, ServeRequest(1, 90, 2))]   # same bucket, denied pages
+    head_req = ServeRequest(3, 100, 8)   # bucket (4, 128), 1 free row
+    tail_req = ServeRequest(1, 90, 2)    # same bucket, denied pages
+    arrivals = [(0.00, head_req), (0.05, tail_req)]
     results = sched.run(arrivals)
     assert len(results) == 2
     assert sched.metrics.joins == 0
     assert srv.pool.metrics.pages_denied >= 1
-    tail = next(r for r in results if r["rid"] == 1)
-    head = next(r for r in results if r["rid"] == 0)
+    tail = next(r for r in results if r["rid"] == tail_req.rid)
+    head = next(r for r in results if r["rid"] == head_req.rid)
     # the tail waited out the head's whole decode; the head started at once
     assert tail["queue_s"] > head["exec_s"] * 0.5
     assert head["queue_s"] < 0.01
@@ -263,12 +265,13 @@ def test_plan_server_page_statistic_never_under_observed():
 
 
 def test_scheduler_recycled_arena_zeroed_for_no_handoff_family(monkeypatch):
-    """Regression: ``_start_group`` leased recycled arenas without the
-    ``zero=`` flag ``PlanServer.handle`` passes — a second no-handoff group
-    (``pkv is None`` ⇒ rows decode from an assumed-zero cache) inherited
-    the previous tenant's recurrent state. Recycle an arena between two
-    no-handoff groups and require tokens identical to a fresh-cache run.
-    SSD state is carried additively, so any leak changes the logits."""
+    """Regression: the scheduler's group formation (now the engine's
+    ``_form_group``) leased recycled arenas without the ``zero=`` flag the
+    sequential path passes — a second no-handoff group (``pkv is None`` ⇒
+    rows decode from an assumed-zero cache) inherited the previous
+    tenant's recurrent state. Recycle an arena between two no-handoff
+    groups and require tokens identical to a fresh-cache run. SSD state is
+    carried additively, so any leak changes the logits."""
     cfg = get_config("mamba2-1.3b-smoke")
     monkeypatch.setattr(Model, "supports_handoff", property(lambda s: False))
 
@@ -312,13 +315,14 @@ def test_interleaved_buckets_refusals_stay_head_of_line_fair():
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16, pool_max_arenas=1)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=8,
                                         join_mid_decode=True)
-    arrivals = [
-        (0.000, ServeRequest(7, 100, 24)),   # H1: leases the only arena
-        (0.001, ServeRequest(1, 104, 4)),    # H2: rides H1's group, frees a row
-        (0.002, ServeRequest(1, 108, 4)),    # A4: joins H2's freed row later
-        (0.003, ServeRequest(1, 40, 2)),     # B1: bucket 64, OLDER than A2
-        (0.004, ServeRequest(2, 112, 4)),    # A2: bucket 128 rider
+    reqs = [
+        ServeRequest(7, 100, 24),   # H1: leases the only arena
+        ServeRequest(1, 104, 4),    # H2: rides H1's group, frees a row
+        ServeRequest(1, 108, 4),    # A4: joins H2's freed row later
+        ServeRequest(1, 40, 2),     # B1: bucket 64, OLDER than A2
+        ServeRequest(2, 112, 4),    # A2: bucket 128 rider
     ]
+    arrivals = [(0.001 * i, r) for i, r in enumerate(reqs)]
     results = sched.run(arrivals)
     assert len(results) == 5
     # A4 (and possibly H2, timing-dependent) absorbed mid-decode: the
@@ -326,11 +330,11 @@ def test_interleaved_buckets_refusals_stay_head_of_line_fair():
     # older B1 adjacent in the queue — where the old requeue had swapped them
     assert sched.metrics.joins >= 1
     order = [r["rid"] for r in results]
-    # B1 (rid 3) arrived before A2 (rid 4): after the arena drains it must
-    # form its group first — the old requeue served A2 ahead of it
-    assert order.index(3) < order.index(4)
-    b1 = next(r for r in results if r["rid"] == 3)
-    a2 = next(r for r in results if r["rid"] == 4)
+    # B1 arrived before A2: after the arena drains it must form its group
+    # first — the old requeue served A2 ahead of it
+    assert order.index(reqs[3].rid) < order.index(reqs[4].rid)
+    b1 = next(r for r in results if r["rid"] == reqs[3].rid)
+    a2 = next(r for r in results if r["rid"] == reqs[4].rid)
     assert b1["queue_s"] <= a2["queue_s"]
 
 
@@ -358,9 +362,10 @@ def test_percentile_nearest_rank_never_picks_lower_sample():
 
 
 def test_alloc_rows_invariant_raises_with_context():
+    # the one admission helper every serving path goes through fails
+    # loudly (with context) when upstream accounting is out of sync
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
-    sched = ContinuousBatchingScheduler(srv)
     arena = srv.pool.acquire(1, 64, force=True)
-    qr = sched.queue.admit(ServeRequest(2, 40, 2))
     with pytest.raises(RuntimeError, match="row invariant.*2 rows.*1 free"):
-        sched._alloc_rows_checked(arena, qr, "_try_joins")
+        srv.pool.admit_request_rows(arena, 2, prompt=40, span=42,
+                                    where="_try_joins")

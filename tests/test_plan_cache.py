@@ -13,6 +13,7 @@ from repro.core.plan_cache import (BucketPolicy, CacheEntry, PlanCache,
                                    PlanKey, bucket_pow2, recompile_reasons)
 from repro.core.planner import PlanCompiler, compile_plan
 from repro.core.strategies import RuntimeStats
+from repro.runtime.serve_loop import PlanServer, ServeRequest
 
 CFG = get_config("yi-6b-smoke")
 
@@ -228,8 +229,6 @@ def test_recompile_scales_estimates_monotonically():
 
 
 def test_plan_server_mixed_stream_end_to_end():
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
-
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=8)
     r1 = srv.handle(ServeRequest(2, 100, new_tokens=2))
     assert r1["tokens"].shape == (2, 2)
@@ -246,8 +245,6 @@ def test_plan_server_mixed_stream_end_to_end():
 
 
 def test_plan_server_cache_off_always_compiles():
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
-
     srv = PlanServer(CFG, dtype=jnp.float32, enable_cache=False)
     srv.handle(ServeRequest(1, 40, new_tokens=1))
     srv.handle(ServeRequest(1, 40, new_tokens=1))

@@ -83,14 +83,16 @@ def test_scheduler_coalesces_and_completes_all():
     results = sched.run(simulate_arrivals(reqs))
     assert len(results) == 4
     assert sched.metrics.admitted == 4 and sched.metrics.completed == 4
-    # closed burst: the three 128-bucket requests share one group
+    # results key on the request's own construction-stamped rid
     by_rid = {r["rid"]: r for r in results}
-    assert by_rid[0]["group_size"] == 3
-    assert by_rid[0]["bucket"] == (4, 128)
-    assert by_rid[3]["group_size"] == 1
+    assert set(by_rid) == {r.rid for r in reqs}
+    # closed burst: the three 128-bucket requests share one group
+    assert by_rid[reqs[0].rid]["group_size"] == 3
+    assert by_rid[reqs[0].rid]["bucket"] == (4, 128)
+    assert by_rid[reqs[3].rid]["group_size"] == 1
     # per-request tokens come back at the request's own batch size
-    assert by_rid[1]["tokens"].shape == (2, 2)
-    assert by_rid[2]["tokens"].shape == (1, 3)
+    assert by_rid[reqs[1].rid]["tokens"].shape == (2, 2)
+    assert by_rid[reqs[2].rid]["tokens"].shape == (1, 3)
     assert sched.metrics.groups == 2
     assert sched.metrics.coalesced_requests == 3
     assert sched.metrics.queue_latency.count == 4
@@ -117,11 +119,12 @@ def test_scheduler_interleaves_prefill_between_decode_steps():
     finish) before the first group drains — continuous, not sequential."""
     srv = PlanServer(CFG, dtype=jnp.float32, capacity=16)
     sched = ContinuousBatchingScheduler(srv, max_group_batch=4)
+    short = ServeRequest(1, 40, 1)                 # different bucket, short
     arrivals = [(0.0, ServeRequest(1, 100, 12)),   # long decode
-                (0.0, ServeRequest(1, 40, 1))]     # different bucket, short
+                (0.0, short)]
     results = sched.run(arrivals)
     order = [r["rid"] for r in results]
-    assert order[0] == 1                      # short request finished first
+    assert order[0] == short.rid              # short request finished first
     assert sched.metrics.groups == 2
 
 
