@@ -34,6 +34,11 @@ import json
 import statistics
 import sys
 import time
+try:
+    from benchmarks.bench_meta import scenario_meta
+except ImportError:  # run as a script from the benchmarks/ directory
+    from bench_meta import scenario_meta
+
 
 TARGET_OVERHEAD = 1.10
 RESULTS_JSON = "BENCH_engine.json"
@@ -58,30 +63,30 @@ def _time_trial(fn) -> float:
 
 def _measure(smoke: bool, arch: str):
     """Returns (rows, overhead, equal, recompiles, detail)."""
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import get_config
-    from repro.runtime.engine import ServingEngine
+    from repro.runtime.engine_config import EngineConfig
     from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                          simulate_arrivals)
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
+    from repro.runtime.serve_loop import ServeRequest
 
     cfg = get_config(arch)
+    ecfg = EngineConfig(cache_capacity=16)
     shapes, new_tokens, trials = _stream(smoke)
     reqs = [ServeRequest(b, c, new_tokens) for b, c in shapes]
 
     # one server for everything: identical params, warm plan cache
-    srv = PlanServer(cfg, dtype=jnp.float32, capacity=16)
-    ContinuousBatchingScheduler(srv, max_group_batch=8).run(
+    srv = ecfg.build_server(cfg)
+    ContinuousBatchingScheduler(srv, config=ecfg).run(
         simulate_arrivals(reqs))
 
     def run_batch():
-        sched = ContinuousBatchingScheduler(srv, max_group_batch=8)
+        sched = ContinuousBatchingScheduler(srv, config=ecfg)
         return sched.run(simulate_arrivals(reqs))
 
     def run_streamed():
-        eng = ServingEngine(srv)
+        eng = ecfg.build_engine(srv)
         handles = [eng.submit(r) for r in reqs]
         toks = {h.rid: [] for h in handles}
         for ev in eng.events():
@@ -128,10 +133,10 @@ def _measure(smoke: bool, arch: str):
 
     # cancel scenario (informational): half the requests hang up after 2
     # tokens; their rows/pages return the same tick and join-admit the rest
-    srv_c = PlanServer(cfg, dtype=jnp.float32, capacity=16)
+    srv_c = ecfg.build_server(cfg)
     n_c = 6 if smoke else 10
     cancel_reqs = [ServeRequest(1, 60, 24) for _ in range(n_c)]
-    eng_c = ServingEngine(srv_c)
+    eng_c = ecfg.build_engine(srv_c)
     ch = {h.rid: h for h in (eng_c.submit(r) for r in cancel_reqs)}
     victims = {r.rid for r in cancel_reqs[::2]}
     for ev in eng_c.events():
@@ -202,6 +207,7 @@ def main(argv=None) -> int:
     with open(RESULTS_JSON, "w") as f:
         json.dump({
             "bench": "engine", "smoke": args.smoke, "arch": args.arch,
+            "meta": scenario_meta(args.arch),
             "rows": rows, "ok": ok,
             "gates": {
                 "streaming_overhead": {"value": overhead,

@@ -1,0 +1,46 @@
+"""Scenario metadata for benchmark artifacts.
+
+Every ``BENCH_*.json`` the harness writes is a point on a perf
+trajectory; a point is only comparable to its neighbors if it says what
+scenario produced it. :func:`scenario_meta` stamps the knobs that change
+the numbers — model arch, replica count, arrival rate — plus the code
+revision (``git describe``) and interpreter, so two artifacts can be
+diffed without guessing which commit or fleet shape they came from.
+"""
+
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+from typing import Any, Dict
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_describe() -> str:
+    """Current revision (`git describe --always --dirty`), or "unknown"
+    outside a git checkout — benches must not fail over provenance."""
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty", "--tags"],
+            capture_output=True, text=True, timeout=10, cwd=_REPO_ROOT)
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+    rev = out.stdout.strip()
+    return rev if out.returncode == 0 and rev else "unknown"
+
+
+def scenario_meta(arch: str, *, replicas: int = 1,
+                  arrival_rate: float = 0.0, **extra: Any) -> Dict[str, Any]:
+    """The dict every bench embeds under ``"meta"`` in its JSON artifact."""
+    meta: Dict[str, Any] = {
+        "arch": arch,
+        "replicas": replicas,
+        "arrival_rate_per_s": arrival_rate,
+        "git": git_describe(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+    meta.update(extra)
+    return meta

@@ -20,6 +20,11 @@ import argparse
 import json
 import statistics
 import sys
+try:
+    from benchmarks.bench_meta import scenario_meta
+except ImportError:  # run as a script from the benchmarks/ directory
+    from bench_meta import scenario_meta
+
 
 RESULTS_JSON = "BENCH_plan_cache.json"
 
@@ -35,10 +40,9 @@ def _stream(smoke: bool):
 def _measure(smoke: bool, arch: str):
     """Returns (rows, speedup): the CSV rows plus the numeric on/off ratio
     so the CI gate doesn't re-parse its own formatting."""
-    import jax.numpy as jnp
-
     from repro.configs import get_config
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
+    from repro.runtime.engine_config import EngineConfig
+    from repro.runtime.serve_loop import ServeRequest
 
     cfg = get_config(arch)
     shapes, repeats = _stream(smoke)
@@ -46,7 +50,7 @@ def _measure(smoke: bool, arch: str):
     rows = []
 
     # --- cache ON: warm pass settles compiles/recompiles, then measure ---
-    srv = PlanServer(cfg, dtype=jnp.float32, enable_cache=True, capacity=16)
+    srv = EngineConfig(cache_capacity=16).build_server(cfg)
     for b, c in sorted(set(shapes)):  # warm each bucket (compile + trace)
         srv.handle(ServeRequest(b, c, new_tokens))
         srv.handle(ServeRequest(b, c, new_tokens))  # settle recompilation
@@ -61,7 +65,7 @@ def _measure(smoke: bool, arch: str):
 
     # --- cache OFF: every request pays planner walk + fresh trace ---------
     off_repeats = 1 if smoke else 2
-    srv_off = PlanServer(cfg, dtype=jnp.float32, enable_cache=False)
+    srv_off = EngineConfig(enable_cache=False).build_server(cfg)
     off_lat = [srv_off.handle(ServeRequest(b, c, new_tokens))["latency_s"]
                for _ in range(off_repeats) for b, c in shapes]
     off_us = statistics.mean(off_lat) * 1e6
@@ -92,6 +96,7 @@ def main(argv=None) -> int:
     with open(RESULTS_JSON, "w") as f:
         json.dump({
             "bench": "plan_cache", "smoke": args.smoke, "arch": args.arch,
+            "meta": scenario_meta(args.arch),
             "rows": rows, "ok": ok,
             "gates": {"cached_speedup": {"value": speedup, "target": 5.0}},
         }, f, indent=2)

@@ -37,6 +37,12 @@ import argparse
 import json
 import sys
 import time
+from dataclasses import replace
+try:
+    from benchmarks.bench_meta import scenario_meta
+except ImportError:  # run as a script from the benchmarks/ directory
+    from bench_meta import scenario_meta
+
 
 # The coalesced-vs-sequential target was 2.0x when sequential serving
 # re-decoded the prompt's first token against a zero cache and allocated a
@@ -83,9 +89,10 @@ def _residency(smoke: bool, arch: str):
     import jax.numpy as jnp
 
     from repro.configs import get_config
+    from repro.runtime.engine_config import EngineConfig
     from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                          simulate_arrivals)
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
+    from repro.runtime.serve_loop import ServeRequest
 
     from repro.models.model import build_model
     from repro.runtime.kv_cache import KVCachePool
@@ -100,9 +107,10 @@ def _residency(smoke: bool, arch: str):
 
     peaks, recompiles, pools = {}, 0, {}
     for name, page in (("row_granular", 0), ("paged", 16)):
-        srv = PlanServer(cfg, dtype=jnp.float32, capacity=16,
-                         page_size=page, pool_max_bytes=budget)
-        sched = ContinuousBatchingScheduler(srv, max_group_batch=8)
+        ecfg = EngineConfig(cache_capacity=16, page_size=page,
+                            pool_max_bytes=budget)
+        srv = ecfg.build_server(cfg)
+        sched = ContinuousBatchingScheduler(srv, config=ecfg)
         results = sched.run(simulate_arrivals(reqs))
         assert len(results) == n_req, (name, len(results))
         peaks[name] = sched.metrics.peak_resident
@@ -132,23 +140,23 @@ def _measure(smoke: bool, arch: str):
     numeric gates so CI doesn't re-parse its own formatting. All paths run
     from warm plan caches; each is timed over several trials and the best
     trial is compared (noise floor, not luck)."""
-    import jax.numpy as jnp
-
     from repro.configs import get_config
+    from repro.runtime.engine_config import EngineConfig
     from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                          simulate_arrivals)
-    from repro.runtime.serve_loop import PlanServer, ServeRequest
+    from repro.runtime.serve_loop import ServeRequest
 
     cfg = get_config(arch)
+    ecfg = EngineConfig(cache_capacity=16)
     shapes, new_tokens, trials = _stream(smoke)
     reqs = [ServeRequest(b, c, new_tokens) for b, c in shapes]
 
     # warm both paths: compile + trace every bucket outside measurement
-    srv_seq = PlanServer(cfg, dtype=jnp.float32, capacity=16, prefill=True)
+    srv_seq = EngineConfig(cache_capacity=16, prefill=True).build_server(cfg)
     for b, c in sorted(set(shapes)):
         srv_seq.handle(ServeRequest(b, c, new_tokens))
-    srv = PlanServer(cfg, dtype=jnp.float32, capacity=16)
-    ContinuousBatchingScheduler(srv, max_group_batch=8).run(
+    srv = ecfg.build_server(cfg)
+    ContinuousBatchingScheduler(srv, config=ecfg).run(
         simulate_arrivals(reqs))
 
     # interleave trials so transient box load penalizes both paths alike;
@@ -158,7 +166,7 @@ def _measure(smoke: bool, arch: str):
         dt = _time_trial(lambda: [srv_seq.handle(r) for r in reqs])
         if seq_s is None or dt < seq_s:
             seq_s = dt
-        trial = ContinuousBatchingScheduler(srv, max_group_batch=8)
+        trial = ContinuousBatchingScheduler(srv, config=ecfg)
         dt = _time_trial(lambda: trial.run(simulate_arrivals(reqs)))
         if coal_s is None or dt < coal_s:
             coal_s, sched = dt, trial
@@ -167,18 +175,18 @@ def _measure(smoke: bool, arch: str):
     speedup = coal_rps / seq_rps if seq_rps else 0.0
 
     # mid-decode joins vs admission-only on a one-arena pool budget
-    srv_join = PlanServer(cfg, dtype=jnp.float32, capacity=16,
-                          pool_max_arenas=1)
+    jcfg = EngineConfig(cache_capacity=16, pool_max_arenas=1)
+    srv_join = jcfg.build_server(cfg)
     arrivals = [(t, ServeRequest(*r)) for t, r in _join_arrivals(smoke)]
     # warm every plan (incl. the batch-1 join prefill bucket) off the clock
-    ContinuousBatchingScheduler(srv_join, max_group_batch=8).run(arrivals)
+    ContinuousBatchingScheduler(srv_join, config=jcfg).run(arrivals)
     p95 = {}
     joins = 0
     for mode in (True, False):
         best = None
         for _ in range(trials):
-            trial = ContinuousBatchingScheduler(srv_join, max_group_batch=8,
-                                                join_mid_decode=mode)
+            trial = ContinuousBatchingScheduler(
+                srv_join, config=replace(jcfg, join_mid_decode=mode))
             trial.run(arrivals)
             q95 = trial.metrics.queue_latency.percentile(95)
             if best is None or q95 < best:
@@ -255,6 +263,7 @@ def main(argv=None) -> int:
     with open(RESULTS_JSON, "w") as f:
         json.dump({
             "bench": "scheduler", "smoke": args.smoke, "arch": args.arch,
+            "meta": scenario_meta(args.arch),
             "rows": rows, "ok": ok,
             "gates": {
                 "coalesced_speedup": {"value": speedup,

@@ -15,11 +15,11 @@ def main() -> None:
     from benchmarks import (bench_engine, bench_kernels,
                             bench_operator_selection, bench_parfor,
                             bench_plan_cache, bench_plan_selection,
-                            bench_roofline)
+                            bench_roofline, bench_router)
 
     print("name,us_per_call,derived")
     for mod in (bench_operator_selection, bench_plan_selection,
-                bench_plan_cache, bench_engine, bench_parfor,
+                bench_plan_cache, bench_engine, bench_router, bench_parfor,
                 bench_kernels, bench_roofline):
         try:
             for row in mod.run():

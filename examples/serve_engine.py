@@ -19,11 +19,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
 
-import jax.numpy as jnp
-
 from repro.configs import get_config
-from repro.runtime.engine import ServingEngine
-from repro.runtime.serve_loop import PlanServer, ServeRequest
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.serve_loop import ServeRequest
 
 
 def main():
@@ -31,8 +29,9 @@ def main():
     ap.add_argument("--arch", default="yi-6b-smoke")
     args = ap.parse_args()
 
-    srv = PlanServer(get_config(args.arch), dtype=jnp.float32, capacity=16)
-    eng = ServingEngine(srv)
+    cfg = EngineConfig(cache_capacity=16)
+    srv = cfg.build_server(get_config(args.arch))
+    eng = cfg.build_engine(srv)
 
     # --- 1. online submission: no trace, just submit into the live engine
     a = eng.submit(ServeRequest(batch=5, context=100, new_tokens=12))

@@ -1,8 +1,10 @@
-"""Serving launcher: three configurations of the one ServingEngine.
+"""Serving launcher: every mode is one ``EngineClient`` behind one config.
 
-Every mode is the same engine (``repro.runtime.engine.ServingEngine``) —
-the single request-lifecycle API — differing only in how requests are fed
-and consumed:
+All flags fold into a single :class:`repro.runtime.engine_config.
+EngineConfig`; the modes differ only in how requests are fed and consumed,
+and ``--replicas N`` swaps the bare engine for an
+:class:`repro.runtime.router.EngineRouter` over N replicas without
+changing anything else (both satisfy the ``EngineClient`` protocol):
 
 Single-shot mode (streams the one request's tokens as they decode):
 
@@ -35,6 +37,17 @@ both release the request's cache rows/pages the same tick:
     # early termination exercises: EOS stops + client disconnects
     PYTHONPATH=src python -m repro.launch.serve --scheduler \
         --requests 24 --eos-id 450 --cancel-after 6
+
+Multi-replica fleet mode — the same scheduler front door over an
+``EngineRouter``: requests are placed across replicas (bucket affinity by
+default, ``--placement load`` for queue-pressure ranking), and
+``--drain-replica N`` takes replica N out mid-run to demonstrate failover
+(its in-flight requests finish on the survivors, token streams intact):
+
+    PYTHONPATH=src python -m repro.launch.serve --scheduler --replicas 2 \
+        --requests 24 --arrival-rate 50
+    PYTHONPATH=src python -m repro.launch.serve --scheduler --replicas 3 \
+        --requests 24 --drain-replica 1
 """
 
 from __future__ import annotations
@@ -42,12 +55,9 @@ from __future__ import annotations
 import argparse
 import random
 
-import jax.numpy as jnp
-
 from repro.configs import get_config
-from repro.runtime.engine import ServingEngine
-from repro.runtime.scheduler import (ContinuousBatchingScheduler,
-                                     simulate_arrivals)
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.scheduler import simulate_arrivals
 from repro.runtime.serve_loop import PlanServer, ServeRequest
 
 DEFAULT_SHAPE_MIX = ((1, 40), (2, 100), (4, 60), (1, 200), (2, 250))
@@ -68,18 +78,10 @@ def _parse_shapes(spec: str):
 
 
 def _build_server(args) -> PlanServer:
-    cfg = get_config(args.arch)
-    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
-    # seed + recompile margin plumbed through so streams are reproducible
-    # A/B runs (same model init, same recompilation predicate)
-    return PlanServer(cfg, dtype=dtype, enable_cache=not args.no_cache,
-                      capacity=args.cache_capacity, seed=args.seed,
-                      recompile_margin=args.recompile_margin,
-                      prefill=getattr(args, "prefill", False),
-                      pool_arenas=args.pool_arenas,
-                      pool_max_arenas=args.pool_max_arenas,
-                      pool_max_bytes=args.pool_max_bytes,
-                      page_size=args.page_size)
+    # every flag folds into the one EngineConfig; the seed covers model
+    # init, the request mix, and arrivals, so streams are reproducible
+    # A/B runs (same params, same recompilation predicate)
+    return EngineConfig.from_args(args).build_server(get_config(args.arch))
 
 
 def _request_mix(args):
@@ -111,32 +113,47 @@ def serve_stream(args) -> None:
 
 
 def serve_scheduled(args) -> None:
-    """Continuous-batching mode: the engine driven with Poisson arrivals
-    through the trace-replay adapter, consuming the token-event stream
-    (and cancelling mid-decode when ``--cancel-after`` says the client
-    hung up)."""
-    srv = _build_server(args)
+    """Continuous-batching mode, written once against the ``EngineClient``
+    protocol: a bare engine for ``--replicas 1``, an ``EngineRouter`` for
+    more — Poisson arrivals in, token-event stream out (cancelling
+    mid-decode when ``--cancel-after`` says the client hung up, draining
+    a replica mid-run when ``--drain-replica`` says it is going away)."""
+    engine_cfg = EngineConfig.from_args(args)
+    if args.drain_replica is not None and not (
+            0 <= args.drain_replica < engine_cfg.replicas):
+        raise SystemExit(f"--drain-replica {args.drain_replica}: no such "
+                         f"replica (--replicas {engine_cfg.replicas})")
+    client = engine_cfg.build_client(get_config(args.arch))
     mix, reqs = _request_mix(args)
-    sched = ContinuousBatchingScheduler(
-        srv, max_group_batch=args.max_group_batch, slo_ms=args.slo_ms,
-        join_mid_decode=args.join_mid_decode)
-    eng = sched.engine
     arrivals = simulate_arrivals(reqs, args.arrival_rate, seed=args.seed)
     print(f"# scheduler: {args.requests} requests over shape mix {mix} "
           f"arrival_rate={args.arrival_rate}/s "
-          f"max_group_batch={args.max_group_batch} "
-          f"join_mid_decode={args.join_mid_decode} "
+          f"replicas={engine_cfg.replicas} "
+          f"placement={engine_cfg.placement} "
+          f"max_group_batch={engine_cfg.max_group_batch} "
+          f"join_mid_decode={engine_cfg.join_mid_decode} "
           f"eos_id={args.eos_id} cancel_after={args.cancel_after}")
 
+    drain = {"pending": args.drain_replica is not None}
+
     def on_event(ev):
+        if (drain["pending"] and ev.token is not None and ev.index >= 1
+                and any(h.replica is not None
+                        and h.replica.idx == args.drain_replica
+                        for h in client.handles.values())):
+            moved = client.drain_replica(args.drain_replica)
+            print(f"# drained replica {args.drain_replica}; resubmitted "
+                  f"{[h.rid for h in moved]} to survivors")
+            drain["pending"] = False
         if (args.cancel_after and ev.token is not None
                 and ev.index + 1 >= args.cancel_after):
-            handle = eng.handles.get(ev.rid)
+            handle = client.handles.get(ev.rid)
             if handle is not None:
-                eng.cancel(handle)
+                client.cancel(handle)
 
-    sched.run(arrivals, on_event=on_event if args.cancel_after else None)
-    for rec in eng.results:
+    need_hook = bool(args.cancel_after) or drain["pending"]
+    client.run(arrivals, on_event=on_event if need_hook else None)
+    for rec in client.results:
         joined = (f" joined@{rec['joined_at_step']}"
                   if rec["joined_at_step"] > 0 else "")
         fin = ("" if rec["finish_reason"] == "length"
@@ -147,14 +164,14 @@ def serve_scheduled(args) -> None:
               f"tokens={rec['tokens'].shape[1]}{fin} "
               f"queue={rec['queue_s'] * 1e3:7.1f}ms "
               f"exec={rec['exec_s'] * 1e3:7.1f}ms")
-    print(eng.summary())
+    print(client.summary())
 
 
 def serve_once(args) -> None:
     """Single-shot mode: one request submitted into the engine, its tokens
     printed as the event stream produces them."""
-    srv = _build_server(args)
-    eng = ServingEngine(srv)
+    cfg = EngineConfig.from_args(args)
+    eng = cfg.build_engine(cfg.build_server(get_config(args.arch)))
     req = ServeRequest(args.batch, args.context, args.tokens,
                        eos_id=args.eos_id)
     handle = eng.submit(req)
@@ -239,6 +256,27 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="scheduler mode: per-request latency objective "
                          "(0 disables SLO accounting)")
+    ap.add_argument("--bucket-select", default="hol",
+                    choices=("hol", "arrival"),
+                    help="queue bucket policy: strict head-of-line (hol) "
+                         "or arrival-aware (the pending bucket with the "
+                         "most coalescable rows forms first, with bounded "
+                         "deferral of the head bucket)")
+    # multi-replica fleet (EngineRouter) knobs
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="scheduler mode: serve through an EngineRouter "
+                         "over N engine replicas (1 = bare engine; both "
+                         "present the same EngineClient API)")
+    ap.add_argument("--placement", default="affinity",
+                    choices=("affinity", "load"),
+                    help="router placement policy: deterministic bucket/"
+                         "plan-cache affinity, or adaptive queue-pressure "
+                         "+ observed-TTFT ranking")
+    ap.add_argument("--drain-replica", type=int, default=None,
+                    metavar="N",
+                    help="fleet mode: drain replica N once it holds "
+                         "streaming work — its in-flight requests finish "
+                         "on the survivors (failover demo)")
     # request-lifecycle knobs (engine stop conditions + cancellation)
     ap.add_argument("--eos-id", type=int, default=None,
                     help="stamp an end-of-sequence stop condition on every "

@@ -26,9 +26,14 @@ The engine is re-entrant and tick-driven:
   become mid-decode join capacity and byte-budget headroom.
 
 Time is injectable (:class:`Clock` protocol): :class:`VirtualClock` skips
-idle gaps for simulated benches, :class:`WallClock` serves online traffic —
-the same engine runs both. ``ContinuousBatchingScheduler.run`` and
-``PlanServer.handle`` are thin adapters over this class.
+idle gaps for simulated benches, :class:`WallClock` serves online traffic,
+:class:`ReplicaClock` accrues only the compute executed between its
+``resume``/``pause`` calls (per-replica device time for co-simulated
+router fleets) — the same engine runs all three.
+``ContinuousBatchingScheduler.run`` and ``PlanServer.handle`` are thin
+adapters over this class, and the :class:`EngineClient` protocol names the
+surface they (and ``repro.runtime.router.EngineRouter``) share, so callers
+are written once against it.
 """
 
 from __future__ import annotations
@@ -36,8 +41,9 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import (TYPE_CHECKING, Any, Deque, Dict, Iterator, List,
-                    Optional, Protocol, Sequence, Tuple)
+from typing import (TYPE_CHECKING, Any, Deque, Dict, Iterable, Iterator,
+                    List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +51,8 @@ import numpy as np
 
 from repro.config import InputShape
 from repro.core.plan_cache import BucketPolicy, CacheEntry, bucket_pow2
+from repro.runtime.engine_config import (_UNSET, EngineConfig,
+                                         fold_legacy_kwargs)
 from repro.runtime.kv_cache import CacheArena
 from repro.runtime.metrics import SchedulerMetrics, scheduler_summary
 
@@ -99,6 +107,47 @@ class WallClock:
             time.sleep(dt)
 
 
+class ReplicaClock:
+    """Per-replica virtual device time for co-simulated fleets.
+
+    Real ``perf_counter`` deltas accrue only between :meth:`resume` and
+    :meth:`pause` — the window the router holds open around *this*
+    replica's ``engine.step()`` — and idle gaps skip forward like
+    :class:`VirtualClock`. N replicas interleaved serially on one host
+    therefore each observe only their own compute: replica A's clock does
+    not tick while replica B decodes, exactly as N distinct devices would
+    behave. This is what lets a single-host bench measure the fleet's
+    *device-time* throughput instead of the co-simulation's wall time."""
+
+    def __init__(self):
+        self._t = 0.0
+        self._anchor: Optional[float] = None   # perf_counter at resume
+
+    @property
+    def running(self) -> bool:
+        return self._anchor is not None
+
+    def now(self) -> float:
+        if self._anchor is not None:
+            return self._t + (time.perf_counter() - self._anchor)
+        return self._t
+
+    def advance_to(self, t: float) -> None:
+        if t > self.now():
+            self._t = t
+            if self._anchor is not None:
+                self._anchor = time.perf_counter()
+
+    def resume(self) -> None:
+        if self._anchor is None:
+            self._anchor = time.perf_counter()
+
+    def pause(self) -> None:
+        if self._anchor is not None:
+            self._t += time.perf_counter() - self._anchor
+            self._anchor = None
+
+
 # ===========================================================================
 # queue
 # ===========================================================================
@@ -136,19 +185,34 @@ class RequestQueue:
     request occupies — so a context landing exactly on a power-of-two
     boundary still gets rows for every token it will generate.
 
-    ``next_group`` is deliberately head-of-line fair: the *oldest* pending
-    request picks the bucket, and only same-bucket requests may join its
-    group (in arrival order, until the group's batch capacity is full). A
-    popular bucket can therefore never starve an unpopular one — it just
-    rides along whenever its own head reaches the front.
+    ``next_group`` is head-of-line fair by default (``select="hol"``): the
+    *oldest* pending request picks the bucket, and only same-bucket
+    requests may join its group (in arrival order, until the group's batch
+    capacity is full). A popular bucket can therefore never starve an
+    unpopular one — it just rides along whenever its own head reaches the
+    front.
+
+    ``select="arrival"`` is arrival-aware: the pending bucket with the
+    most coalescable rows (ties broken toward the older bucket) forms
+    first, trading a bounded amount of head-of-line fairness for fuller
+    groups under bursty mixed-shape arrivals. The trade is bounded by
+    ``max_defer``: after the head-of-line request's bucket has been passed
+    over that many consecutive times, it forms next regardless — the
+    starvation-freedom guarantee survives the reordering.
     """
 
     def __init__(self, policy: BucketPolicy = BucketPolicy(),
-                 max_group_batch: int = 8):
+                 max_group_batch: int = 8, select: str = "hol",
+                 max_defer: int = 4):
         if max_group_batch < 1:
             raise ValueError("max_group_batch must be >= 1")
+        if select not in ("hol", "arrival"):
+            raise ValueError(f"select must be hol|arrival, got {select!r}")
         self.policy = policy
         self.max_group_batch = max_group_batch
+        self.select = select
+        self.max_defer = max(1, max_defer)
+        self._deferrals = 0          # consecutive head-bucket pass-overs
         self._pending: List[QueuedRequest] = []
 
     def __len__(self) -> int:
@@ -176,22 +240,52 @@ class RequestQueue:
                 return qr
         return None
 
+    def _select_bucket(self) -> int:
+        """Pick the bucket the next group serves. "hol": the oldest
+        pending request's bucket, unconditionally. "arrival": the bucket
+        with the most immediately-coalescable rows (capped at the group
+        capacity — rows that can't fit this group don't make it more
+        attractive), ties broken toward the bucket with the oldest
+        arrival; the head-of-line bucket is forced through after
+        ``max_defer`` consecutive deferrals."""
+        head_sb = self.seq_bucket(self._pending[0].req)
+        if self.select != "arrival" or len(self._pending) == 1:
+            self._deferrals = 0
+            return head_sb
+        if self._deferrals >= self.max_defer:
+            self._deferrals = 0
+            return head_sb
+        rows: Dict[int, int] = {}
+        oldest: Dict[int, int] = {}          # bucket -> first pending index
+        for i, qr in enumerate(self._pending):
+            sb = self.seq_bucket(qr.req)
+            rows[sb] = min(self.max_group_batch,
+                           rows.get(sb, 0) + qr.req.batch)
+            oldest.setdefault(sb, i)
+        best = max(rows, key=lambda sb: (rows[sb], -oldest[sb]))
+        if best != head_sb:
+            self._deferrals += 1
+        else:
+            self._deferrals = 0
+        return best
+
     def next_group(self) -> List[QueuedRequest]:
         """Pop the next coalesced group (empty list if nothing pending).
 
-        The head-of-line request always joins (even if its batch alone
-        exceeds ``max_group_batch`` — it must be served eventually); later
-        same-bucket requests fill the remaining batch slots in FIFO order,
-        skipping any too big for the space left.
+        The selected bucket's oldest request always joins (even if its
+        batch alone exceeds ``max_group_batch`` — it must be served
+        eventually); later same-bucket requests fill the remaining batch
+        slots in FIFO order, skipping any too big for the space left.
         """
         if not self._pending:
             return []
-        head = self._pending[0]
-        sb = self.seq_bucket(head.req)
-        group: List[QueuedRequest] = [head]
-        used = head.req.batch
-        for qr in self._pending[1:]:
-            if self.seq_bucket(qr.req) != sb:
+        sb = self._select_bucket()
+        lead = next(qr for qr in self._pending
+                    if self.seq_bucket(qr.req) == sb)
+        group: List[QueuedRequest] = [lead]
+        used = lead.req.batch
+        for qr in self._pending:
+            if qr is lead or self.seq_bucket(qr.req) != sb:
                 continue
             if used + qr.req.batch > self.max_group_batch:
                 continue
@@ -273,7 +367,8 @@ class RequestHandle:
     def __init__(self, engine: "ServingEngine", qr: QueuedRequest):
         self._engine = engine
         self.qr = qr
-        self.state = "queued"            # queued | active | done | cancelled
+        # queued | active | done | cancelled | withdrawn (router failover)
+        self.state = "queued"
         self.result: Optional[Dict[str, Any]] = None
         self._events: Deque[TokenEvent] = deque()
 
@@ -365,6 +460,47 @@ class _Group:
 
 
 # ===========================================================================
+# the client protocol
+# ===========================================================================
+
+
+@runtime_checkable
+class EngineClient(Protocol):
+    """The serving surface callers program against — satisfied by both
+    :class:`ServingEngine` (one device) and
+    :class:`repro.runtime.router.EngineRouter` (N replicas), so benches,
+    tests, and ``launch/serve.py`` are written once and ``replicas=1`` is
+    the bare engine. ``handles`` maps live request ids to their handles
+    (event-driven cancellation routes through it)."""
+
+    handles: Dict[int, Any]
+
+    def submit(self, req: "ServeRequest",
+               arrival_s: Optional[float] = None): ...
+
+    def step(self) -> List[TokenEvent]: ...
+
+    def events(self) -> Iterator[TokenEvent]: ...
+
+    def stream(self, handle) -> Iterator[TokenEvent]: ...
+
+    def cancel(self, handle) -> bool: ...
+
+    def drain(self) -> List[Dict[str, Any]]: ...
+
+    def run(self, arrivals: Iterable[Tuple[float, "ServeRequest"]],
+            on_event=None) -> List[Dict[str, Any]]: ...
+
+    def summary(self) -> str: ...
+
+    @property
+    def idle(self) -> bool: ...
+
+    @property
+    def metrics(self) -> SchedulerMetrics: ...
+
+
+# ===========================================================================
 # the engine
 # ===========================================================================
 
@@ -403,21 +539,35 @@ class ServingEngine:
         self,
         server: "PlanServer",
         *,
-        max_group_batch: int = 8,
-        slo_ms: float = 0.0,
+        config: Optional[EngineConfig] = None,
+        max_group_batch: int = _UNSET,
+        slo_ms: float = _UNSET,
         queue: Optional[RequestQueue] = None,
-        join_mid_decode: bool = True,
+        join_mid_decode: bool = _UNSET,
         clock: Optional[Clock] = None,
         prefill: bool = True,
         count_first: bool = True,
         eager_pages: bool = False,
         sync_per_tick: bool = True,
     ):
+        # one config surface: explicit config wins, else inherit the
+        # server's (so an engine over a config-built server needs no
+        # re-plumbing); legacy kwargs overlay as deprecated shims.
+        # prefill/count_first/eager_pages/sync_per_tick stay plain kwargs:
+        # they are adapter-mode flags (handle() vs scheduler), not
+        # scenario configuration.
+        base = config if config is not None else getattr(server, "config",
+                                                         None)
+        self.config = fold_legacy_kwargs(
+            base, "ServingEngine", max_group_batch=max_group_batch,
+            slo_ms=slo_ms, join_mid_decode=join_mid_decode)
         self.server = server
         self.clock: Clock = clock or VirtualClock()
-        self.queue = queue or RequestQueue(server.policy, max_group_batch)
-        self.metrics = SchedulerMetrics(slo_s=slo_ms / 1e3)
-        self.join_mid_decode = join_mid_decode
+        self.queue = queue or RequestQueue(
+            server.policy, self.config.max_group_batch,
+            select=self.config.bucket_select)
+        self.metrics = SchedulerMetrics(slo_s=self.config.slo_ms / 1e3)
+        self.join_mid_decode = self.config.join_mid_decode
         self.prefill = prefill
         self.count_first = count_first
         self.eager_pages = eager_pages
@@ -549,6 +699,71 @@ class ServingEngine:
         while not self.idle:
             self.step()
         return self.results
+
+    def run(self, arrivals: Iterable[Tuple[float, "ServeRequest"]],
+            on_event=None) -> List[Dict[str, Any]]:
+        """Replay a ``(arrival_s, request)`` trace to completion (the
+        offline front door, shared with the router via ``EngineClient``).
+
+        Arrivals are submitted when due on the engine clock; between
+        arrivals the engine ticks, and an idle engine skips ahead to the
+        next arrival instead of sleeping (virtual clock). ``on_event(ev)``
+        is called for every event each tick emits — the hook streaming
+        consumers and cancellation drivers use without re-implementing
+        this loop."""
+        todo = sorted(arrivals, key=lambda a: a[0])
+        idx = 0
+        while idx < len(todo) or not self.idle:
+            now = self.clock.now()
+            while idx < len(todo) and todo[idx][0] <= now:
+                self.submit(todo[idx][1], arrival_s=todo[idx][0])
+                idx += 1
+            if self.idle:
+                # idle: skip ahead to the next arrival instead of sleeping
+                self.clock.advance_to(todo[idx][0])
+                continue
+            events = self.step()
+            if on_event is not None:
+                for ev in events:
+                    on_event(ev)
+        return self.results
+
+    def withdraw(self, handle: RequestHandle) -> Optional[QueuedRequest]:
+        """Silently remove a live request for resubmission elsewhere (the
+        router's failover primitive). Unlike :meth:`cancel` this emits no
+        terminal event and writes no completion record — the request is
+        not *finished*, it is *moving* — and the admission count is given
+        back, so fleet metrics don't double-count the resubmission. An
+        active member's rows, committed pages, and undrawn span
+        reservation return to the pool immediately. Returns the queue
+        record (its original ``arrival_s`` rides along to the new
+        replica); None if the request already finished."""
+        if handle.done:
+            return None
+        qr = self.queue.remove(handle.rid)
+        if qr is None:
+            for group in list(self.active):
+                for m in group.members:
+                    if m.qr.rid == handle.rid and not m.done:
+                        m.done = True
+                        m.finish_reason = "withdrawn"
+                        self.server.pool.free_rows(group.arena, m.rows,
+                                                   early=True)
+                        if group.done:
+                            self._retire_group(group)
+                            self.active.remove(group)
+                        qr = m.qr
+                        break
+                if qr is not None:
+                    break
+        if qr is None:
+            return None
+        self.metrics.admitted -= 1
+        self.handles.pop(handle.rid, None)
+        self._page_denied_rids.discard(handle.rid)
+        handle.state = "withdrawn"
+        handle._events.clear()
+        return qr
 
     def discard(self, handle: RequestHandle) -> None:
         """Forget a finished request's bookkeeping (long-lived adapters —

@@ -1,0 +1,148 @@
+"""EngineConfig: the one configuration surface for the serving stack.
+
+The serving entry points had grown three divergent kwarg vocabularies —
+``PlanServer(pool_max_bytes=..., page_size=...)``,
+``ServingEngine(max_group_batch=..., join_mid_decode=...)``, and the
+``launch/serve.py`` argparse flags that re-spelled both — so adding a knob
+meant threading it through every layer by hand (and forgetting one, which
+is exactly how ``prefill`` ended up defaulting differently per front
+door). This module is the SystemML single-API argument applied to
+configuration: one frozen :class:`EngineConfig` that every layer builds
+from, with the old per-class kwargs kept as deprecated shims for one
+release (:func:`fold_legacy_kwargs` overlays them onto a config and warns
+once per call site class + kwarg).
+
+The config also owns topology: ``replicas`` / ``placement`` decide whether
+:meth:`EngineConfig.build_client` returns a bare
+:class:`~repro.runtime.engine.ServingEngine` or a
+:class:`~repro.runtime.router.EngineRouter` over N replicas — both satisfy
+the :class:`~repro.runtime.engine.EngineClient` protocol, so callers are
+written once against the protocol and ``replicas=1`` is the bare engine.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields, replace
+from typing import Any, Optional
+
+# sentinel for "caller did not pass this legacy kwarg" — None is a real
+# value for several of them (eos_id-style), so absence needs its own mark
+_UNSET: Any = object()
+
+# (owner, kwarg) pairs already warned about — deprecation noise once per
+# process per call-site vocabulary, not once per constructed object
+_WARNED: set = set()
+
+
+def fold_legacy_kwargs(config: Optional["EngineConfig"], owner: str,
+                       **overrides) -> "EngineConfig":
+    """Overlay explicitly-passed legacy kwargs onto ``config`` (or a
+    default config), warning once per ``(owner, kwarg)``. Legacy kwargs
+    win over the config they shadow — existing call sites keep their exact
+    behaviour for the deprecation release."""
+    changes = {k: v for k, v in overrides.items() if v is not _UNSET}
+    for k in changes:
+        tag = (owner, k)
+        if tag not in _WARNED:
+            _WARNED.add(tag)
+            warnings.warn(
+                f"{owner}({k}=...) is deprecated; pass "
+                f"config=EngineConfig({k}=...) instead",
+                DeprecationWarning, stacklevel=3)
+    cfg = config if config is not None else EngineConfig()
+    return replace(cfg, **changes) if changes else cfg
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every serving knob, in one place, grouped by the layer it drives.
+
+    ``PlanServer`` reads the plan-cache + pool fields, ``ServingEngine``
+    the batching fields, ``EngineRouter`` the topology fields; the
+    ``launch/serve.py`` argparse maps onto the whole thing via
+    :meth:`from_args`. Frozen: a config names a scenario — replicas built
+    from the same config are interchangeable, which is what makes router
+    failover's token-equality guarantee checkable."""
+
+    # -- model / plan-cache (PlanServer) -----------------------------------
+    dtype: str = "float32"            # "float32" | "bfloat16"
+    enable_cache: bool = True
+    cache_capacity: int = 16
+    recompile_margin: float = 0.25
+    seed: int = 0
+    prefill: bool = False             # sequential front door's prompt pass
+
+    # -- KV-cache pool (PlanServer -> KVCachePool) -------------------------
+    pool_arenas: int = 4
+    pool_max_arenas: int = 0
+    pool_max_bytes: float = 0.0
+    page_size: int = 64
+
+    # -- batching / lifecycle (ServingEngine) ------------------------------
+    max_group_batch: int = 8
+    slo_ms: float = 0.0
+    join_mid_decode: bool = True
+    # "hol": strict head-of-line bucket pick; "arrival": the pending bucket
+    # with the most coalescable rows forms first (bounded deferral keeps
+    # the head-of-line bucket starvation-free)
+    bucket_select: str = "hol"
+
+    # -- topology (EngineRouter) -------------------------------------------
+    replicas: int = 1
+    placement: str = "affinity"       # "affinity" | "load"
+
+    def __post_init__(self):
+        if self.dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"dtype must be float32|bfloat16, "
+                             f"got {self.dtype!r}")
+        if self.bucket_select not in ("hol", "arrival"):
+            raise ValueError(f"bucket_select must be hol|arrival, "
+                             f"got {self.bucket_select!r}")
+        if self.placement not in ("affinity", "load"):
+            raise ValueError(f"placement must be affinity|load, "
+                             f"got {self.placement!r}")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+
+    # ------------------------------------------------------------------
+    def jnp_dtype(self):
+        import jax.numpy as jnp
+        return jnp.float32 if self.dtype == "float32" else jnp.bfloat16
+
+    @classmethod
+    def from_args(cls, args) -> "EngineConfig":
+        """Build from an argparse namespace (``launch/serve.py`` flag
+        names). Missing attributes keep their config defaults, so partial
+        namespaces (tests, embedding drivers) work too."""
+        pick = {}
+        for f in fields(cls):
+            if hasattr(args, f.name):
+                pick[f.name] = getattr(args, f.name)
+        # flags whose argparse spelling differs from the field name
+        if hasattr(args, "no_cache"):
+            pick["enable_cache"] = not args.no_cache
+        return cls(**{k: v for k, v in pick.items()})
+
+    # -- builders (function-local imports break the layering cycle:
+    # serve_loop/engine/router all import *this* module) -------------------
+    def build_server(self, model_cfg, mesh_cfg=None, **kw):
+        from repro.runtime.serve_loop import PlanServer
+        return PlanServer(model_cfg, mesh_cfg, config=self, **kw)
+
+    def build_engine(self, server, *, clock=None, **kw):
+        from repro.runtime.engine import ServingEngine
+        return ServingEngine(server, config=self, clock=clock, **kw)
+
+    def build_client(self, model_cfg, mesh_cfg=None, *, servers=None):
+        """The topology decision: one engine for ``replicas == 1``, an
+        :class:`EngineRouter` above that — same ``EngineClient`` surface
+        either way. ``servers``: pre-built (warm) PlanServers to wrap
+        instead of constructing fresh ones (must match ``replicas``)."""
+        if servers is None:
+            servers = [self.build_server(model_cfg, mesh_cfg)
+                       for _ in range(max(1, self.replicas))]
+        if self.replicas <= 1:
+            return self.build_engine(servers[0])
+        from repro.runtime.router import EngineRouter
+        return EngineRouter(servers, config=self)

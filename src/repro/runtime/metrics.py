@@ -209,6 +209,81 @@ class SchedulerMetrics:
         return line
 
 
+def merge_scheduler_metrics(parts) -> "SchedulerMetrics":
+    """Fleet rollup: one :class:`SchedulerMetrics` summing N replicas'
+    counters and pooling their latency samples (percentiles over the
+    merged distribution, not averages of per-replica percentiles — an
+    idle replica must not dilute a hot one's p95). ``peak_resident`` sums
+    per-replica peaks: an upper bound on fleet-wide concurrent residency
+    (the peaks need not have coincided)."""
+    parts = list(parts)
+    out = SchedulerMetrics(slo_s=parts[0].slo_s if parts else 0.0)
+    for m in parts:
+        out.admitted += m.admitted
+        out.completed += m.completed
+        out.groups += m.groups
+        out.coalesced_requests += m.coalesced_requests
+        out.joins += m.joins
+        out.join_rows += m.join_rows
+        out.peak_resident += m.peak_resident
+        out.batch_slots_used += m.batch_slots_used
+        out.batch_slots_total += m.batch_slots_total
+        out.cancelled += m.cancelled
+        out.early_exits += m.early_exits
+        out.slo_met += m.slo_met
+        out.slo_missed += m.slo_missed
+        for dst, src in ((out.queue_latency, m.queue_latency),
+                         (out.exec_latency, m.exec_latency),
+                         (out.total_latency, m.total_latency),
+                         (out.ttft_latency, m.ttft_latency),
+                         (out.itl_latency, m.itl_latency)):
+            dst.samples.extend(src.samples)
+    return out
+
+
+@dataclass
+class RouterMetrics:
+    """EngineRouter accounting: where requests were placed and why, plus
+    the failover counters (``resubmitted`` requests moved off ``drained``
+    replicas with zero loss — the bench gate checks the zero)."""
+
+    placements: Dict[str, int] = field(default_factory=dict)
+    failovers: int = 0             # drain_replica invocations
+    resubmitted: int = 0           # live requests moved to survivors
+    drained: int = 0               # replicas currently draining
+
+    def observe_placement(self, reason: str) -> None:
+        self.placements[reason] = self.placements.get(reason, 0) + 1
+
+    def summary(self) -> str:
+        placed = ",".join(f"{k}={v}"
+                          for k, v in sorted(self.placements.items()))
+        return (f"placements[{placed}] failovers={self.failovers} "
+                f"resubmitted={self.resubmitted} drained={self.drained}")
+
+
+def router_summary(router) -> str:
+    """Multi-line fleet report: one line per replica (its scheduler
+    counters, TTFT tail, and device-clock time), that replica's KV-pool
+    line, then the fleet rollup over the merged metrics."""
+    ms = 1e3
+    lines = [f"router: replicas={len(router.replicas)} "
+             f"placement={router.config.placement} "
+             f"{router.router_metrics.summary()}"]
+    for r in router.replicas:
+        m = r.engine.metrics
+        flag = " DRAINING" if r.draining else ""
+        lines.append(
+            f"replica[{r.idx}]{flag}: admitted={m.admitted} "
+            f"completed={m.completed} groups={m.groups} joins={m.joins} "
+            f"ttft_p95={m.ttft_latency.percentile(95) * ms:.1f}ms "
+            f"device_t={r.clock.now():.3f}s")
+        lines.append("  " + pool_summary(r.server.pool).replace("\n", "\n  "))
+    lines.append("fleet: " + merge_scheduler_metrics(
+        [r.engine.metrics for r in router.replicas]).summary())
+    return "\n".join(lines)
+
+
 def pool_summary(pool) -> str:
     """KV-cache pool report (``repro.runtime.kv_cache``): arena churn, row
     reuse, live occupancy — plus, for paged pools, page churn and internal

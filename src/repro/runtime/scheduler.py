@@ -23,6 +23,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.runtime.engine import (Clock, QueuedRequest,  # noqa: F401
                                   RequestQueue, ServingEngine, VirtualClock)
+from repro.runtime.engine_config import _UNSET, EngineConfig
 from repro.runtime.metrics import SchedulerMetrics
 from repro.runtime.serve_loop import PlanServer, ServeRequest
 
@@ -36,23 +37,27 @@ class ContinuousBatchingScheduler:
     this adapter preserves the PR-2 contract: ``run(arrivals)`` consumes a
     whole trace and returns one completion record per request. Observable
     results are unchanged; the tick structure (admit due arrivals → joins →
-    form at most one group → one decode step per active group) now lives in
-    ``ServingEngine.step``.
+    form at most one group → one decode step per active group) lives in
+    ``ServingEngine.step``, and the replay loop itself is
+    ``ServingEngine.run`` (shared with the router via ``EngineClient``).
+    Configuration flows through :class:`EngineConfig`; the per-knob kwargs
+    are deprecated shims.
     """
 
     def __init__(
         self,
         server: PlanServer,
         *,
-        max_group_batch: int = 8,
-        slo_ms: float = 0.0,
+        config: Optional[EngineConfig] = None,
+        max_group_batch: int = _UNSET,
+        slo_ms: float = _UNSET,
         queue: Optional[RequestQueue] = None,
-        join_mid_decode: bool = True,
+        join_mid_decode: bool = _UNSET,
         clock: Optional[Clock] = None,
     ):
         self.engine = ServingEngine(
-            server, max_group_batch=max_group_batch, slo_ms=slo_ms,
-            queue=queue, join_mid_decode=join_mid_decode,
+            server, config=config, max_group_batch=max_group_batch,
+            slo_ms=slo_ms, queue=queue, join_mid_decode=join_mid_decode,
             clock=clock or VirtualClock())
 
     # engine views (the adapter adds no state of its own) ------------------
@@ -95,23 +100,7 @@ class ContinuousBatchingScheduler:
         cancellation drivers (``serve.py --cancel-after``) use without
         re-implementing this replay loop.
         """
-        eng = self.engine
-        todo = sorted(arrivals, key=lambda a: a[0])
-        idx = 0
-        while idx < len(todo) or not eng.idle:
-            now = eng.clock.now()
-            while idx < len(todo) and todo[idx][0] <= now:
-                eng.submit(todo[idx][1], arrival_s=todo[idx][0])
-                idx += 1
-            if eng.idle:
-                # idle: skip ahead to the next arrival instead of sleeping
-                eng.clock.advance_to(todo[idx][0])
-                continue
-            events = eng.step()
-            if on_event is not None:
-                for ev in events:
-                    on_event(ev)
-        return eng.results
+        return self.engine.run(arrivals, on_event=on_event)
 
     def summary(self) -> str:
         return self.engine.summary()

@@ -16,6 +16,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -32,6 +33,8 @@ from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats
 from repro.models.common import ShardCtx
 from repro.models.model import build_model
 from repro.runtime.engine import ServingEngine, WallClock
+from repro.runtime.engine_config import (_UNSET, EngineConfig,
+                                         fold_legacy_kwargs)
 from repro.runtime.kv_cache import KVCachePool
 from repro.runtime.metrics import LatencyStats, serve_summary
 
@@ -163,51 +166,63 @@ class PlanServer:
         self,
         cfg: ModelConfig,
         mesh_cfg: Optional[MeshConfig] = None,
-        dtype=jnp.float32,
+        dtype=_UNSET,
         *,
         hw: HardwareSpec = TPU_V5E,
-        enable_cache: bool = True,
-        capacity: int = 16,
-        recompile_margin: float = 0.25,
+        config: Optional[EngineConfig] = None,
+        enable_cache: bool = _UNSET,
+        capacity: int = _UNSET,
+        recompile_margin: float = _UNSET,
         policy: BucketPolicy = BucketPolicy(),
-        seed: int = 0,
-        prefill: bool = False,
-        pool_arenas: int = 4,
-        pool_max_arenas: int = 0,
-        pool_max_bytes: float = 0.0,
-        page_size: int = 64,
+        seed: int = _UNSET,
+        prefill: bool = _UNSET,
+        pool_arenas: int = _UNSET,
+        pool_max_arenas: int = _UNSET,
+        pool_max_bytes: float = _UNSET,
+        page_size: int = _UNSET,
     ):
+        # one config surface (EngineConfig); the per-knob kwargs are the
+        # deprecated shims, overlaid on top so existing call sites keep
+        # their exact behaviour for one release
+        self.config = fold_legacy_kwargs(
+            config, "PlanServer",
+            dtype=(np.dtype(dtype).name if dtype is not _UNSET else _UNSET),
+            enable_cache=enable_cache, cache_capacity=capacity,
+            recompile_margin=recompile_margin, seed=seed, prefill=prefill,
+            pool_arenas=pool_arenas, pool_max_arenas=pool_max_arenas,
+            pool_max_bytes=pool_max_bytes, page_size=page_size)
+        c = self.config
         self.cfg = cfg
         self.mesh_cfg = mesh_cfg or MeshConfig(
             shape=(len(jax.devices()),), axis_names=("data",))
-        self.dtype = dtype
-        self.dtype_name = np.dtype(dtype).name
-        self.model = build_model(cfg, dtype=dtype)
-        self.params = self.model.init_params(jax.random.PRNGKey(seed))
+        self.dtype = c.jnp_dtype()
+        self.dtype_name = c.dtype
+        self.model = build_model(cfg, dtype=self.dtype)
+        self.params = self.model.init_params(jax.random.PRNGKey(c.seed))
         self._params_bytes = _tree_bytes(self.params)
         # block-granular paged arenas (0 = row-granular PR-3 behaviour):
         # rows commit pages, not bucket-shaped sequence slack
-        self.page_size = max(0, int(page_size))
+        self.page_size = max(0, int(c.page_size))
         # compile-time cache statistics are sized for a pool provisioned
         # with ``pool_arenas`` concurrent bucket arenas; the pool's live
         # bytes are checked against them at observe() time
-        self.pool_arenas = max(1, pool_arenas)
+        self.pool_arenas = max(1, c.pool_arenas)
         self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas,
                                      cache_page_size=self.page_size)
-        self.pool = KVCachePool(self.model, max_arenas=pool_max_arenas,
-                                max_bytes=pool_max_bytes,
+        self.pool = KVCachePool(self.model, max_arenas=c.pool_max_arenas,
+                                max_bytes=c.pool_max_bytes,
                                 page_size=self.page_size)
-        self.cache = PlanCache(capacity=capacity)
+        self.cache = PlanCache(capacity=c.cache_capacity)
         self.metrics = self.cache.metrics
         self.latency = LatencyStats()
-        self.enable_cache = enable_cache
-        self.recompile_margin = recompile_margin
+        self.enable_cache = c.enable_cache
+        self.recompile_margin = c.recompile_margin
         self.policy = policy
         # prefill=True: handle() runs the cached-prefill prompt pass, hands
         # the populated cache rows to decode (no zero-cache restart), and
         # the prefill-produced first token opens the output; False keeps the
         # PR-1 decode-only request shape. The scheduler always prefills.
-        self.prefill = prefill
+        self.prefill = c.prefill
         self._engine: Optional[ServingEngine] = None
 
     # ------------------------------------------------------------------
@@ -354,8 +369,9 @@ class PlanServer:
             # decode steps dispatch asynchronously (the pre-engine greedy
             # loop's behaviour) and one block at the end settles the work
             self._engine = ServingEngine(
-                self, clock=WallClock(), join_mid_decode=False,
-                prefill=self.prefill,
+                self,
+                config=dc_replace(self.config, join_mid_decode=False),
+                clock=WallClock(), prefill=self.prefill,
                 count_first=self.prefill and self.model.supports_handoff,
                 eager_pages=True, sync_per_tick=False)
         eng = self._engine
