@@ -34,6 +34,15 @@ import json
 import statistics
 import sys
 import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     simulate_arrivals)
+from repro.runtime.serve_loop import ServeRequest
+
 try:
     from benchmarks.bench_meta import scenario_meta
 except ImportError:  # run as a script from the benchmarks/ directory
@@ -63,14 +72,6 @@ def _time_trial(fn) -> float:
 
 def _measure(smoke: bool, arch: str):
     """Returns (rows, overhead, equal, recompiles, detail)."""
-    import numpy as np
-
-    from repro.configs import get_config
-    from repro.runtime.engine_config import EngineConfig
-    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
-                                         simulate_arrivals)
-    from repro.runtime.serve_loop import ServeRequest
-
     cfg = get_config(arch)
     ecfg = EngineConfig(cache_capacity=16)
     shapes, new_tokens, trials = _stream(smoke)

@@ -20,6 +20,11 @@ import argparse
 import json
 import statistics
 import sys
+
+from repro.configs import get_config
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.serve_loop import ServeRequest
+
 try:
     from benchmarks.bench_meta import scenario_meta
 except ImportError:  # run as a script from the benchmarks/ directory
@@ -40,10 +45,6 @@ def _stream(smoke: bool):
 def _measure(smoke: bool, arch: str):
     """Returns (rows, speedup): the CSV rows plus the numeric on/off ratio
     so the CI gate doesn't re-parse its own formatting."""
-    from repro.configs import get_config
-    from repro.runtime.engine_config import EngineConfig
-    from repro.runtime.serve_loop import ServeRequest
-
     cfg = get_config(arch)
     shapes, repeats = _stream(smoke)
     new_tokens = 2 if smoke else 4

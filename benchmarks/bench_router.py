@@ -43,6 +43,17 @@ import json
 import statistics
 import sys
 
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.engine import ServingEngine
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.metrics import LatencyStats
+from repro.runtime.router import EngineRouter
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     simulate_arrivals)
+from repro.runtime.serve_loop import ServeRequest
+
 try:
     from benchmarks.bench_meta import scenario_meta
 except ImportError:  # run as a script from the benchmarks/ directory
@@ -55,9 +66,6 @@ RESULTS_JSON = "BENCH_router.json"
 
 
 def _trace(n: int, new_tokens: int = 8):
-    from repro.runtime.scheduler import simulate_arrivals
-    from repro.runtime.serve_loop import ServeRequest
-
     reqs = [ServeRequest(1, 40 + 4 * (i % 5), new_tokens) for i in range(n)]
     return simulate_arrivals(reqs, 0.0)
 
@@ -70,9 +78,6 @@ def _makespan(results, arrivals) -> float:
 def _throughput(smoke: bool, model, cfg):
     """Scenario A: single engine vs 2-replica router, paired trials on
     the identical closed-burst trace."""
-    from repro.runtime.engine import ServingEngine
-    from repro.runtime.router import EngineRouter
-
     n_req = 12 if smoke else 16
     trials = 4 if smoke else 6
 
@@ -108,7 +113,6 @@ def _throughput(smoke: bool, model, cfg):
     recompiles = (srv_single.metrics.recompiles
                   + sum(s.metrics.recompiles for s in servers) - rc0)
 
-    from repro.runtime.metrics import LatencyStats
     p95_single = LatencyStats(samples=single_ttft).percentile(95)
     p95_fleet = LatencyStats(samples=fleet_ttft).percentile(95)
     return {
@@ -124,13 +128,6 @@ def _failover(smoke: bool, model, cfg):
     """Scenario B: drain replica 1 while it holds streaming work; the
     survivors must finish everything, byte-identical to an undisturbed
     single-engine run of the same shapes."""
-    import numpy as np
-
-    from repro.runtime.router import EngineRouter
-    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
-                                         simulate_arrivals)
-    from repro.runtime.serve_loop import ServeRequest
-
     shapes = [(1, 40, 10), (1, 44, 10), (1, 52, 10),
               (1, 40, 10), (1, 56, 10), (1, 48, 10)]
     if not smoke:
@@ -184,9 +181,6 @@ def _failover(smoke: bool, model, cfg):
 
 
 def _measure(smoke: bool, arch: str):
-    from repro.configs import get_config
-    from repro.runtime.engine_config import EngineConfig
-
     model = get_config(arch)
     cfg = EngineConfig(replicas=REPLICAS)
     thr = _throughput(smoke, model, cfg)

@@ -38,6 +38,17 @@ import json
 import sys
 import time
 from dataclasses import replace
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.kv_cache import KVCachePool
+from repro.runtime.scheduler import (ContinuousBatchingScheduler,
+                                     simulate_arrivals)
+from repro.runtime.serve_loop import ServeRequest
+
 try:
     from benchmarks.bench_meta import scenario_meta
 except ImportError:  # run as a script from the benchmarks/ directory
@@ -86,17 +97,6 @@ def _residency(smoke: bool, arch: str):
     per group; 16-slot pages charge 5 rows x 80 slots — so the same budget
     keeps ~2.5x more requests concurrently resident. Returns
     (rows, gain, recompiles, detail)."""
-    import jax.numpy as jnp
-
-    from repro.configs import get_config
-    from repro.runtime.engine_config import EngineConfig
-    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
-                                         simulate_arrivals)
-    from repro.runtime.serve_loop import ServeRequest
-
-    from repro.models.model import build_model
-    from repro.runtime.kv_cache import KVCachePool
-
     cfg = get_config(arch)
     n_req = 8 if smoke else 12
     reqs = [ServeRequest(5, 68, 12) for _ in range(n_req)]
@@ -140,12 +140,6 @@ def _measure(smoke: bool, arch: str):
     numeric gates so CI doesn't re-parse its own formatting. All paths run
     from warm plan caches; each is timed over several trials and the best
     trial is compared (noise floor, not luck)."""
-    from repro.configs import get_config
-    from repro.runtime.engine_config import EngineConfig
-    from repro.runtime.scheduler import (ContinuousBatchingScheduler,
-                                         simulate_arrivals)
-    from repro.runtime.serve_loop import ServeRequest
-
     cfg = get_config(arch)
     ecfg = EngineConfig(cache_capacity=16)
     shapes, new_tokens, trials = _stream(smoke)

@@ -10,13 +10,13 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract:
 
 import traceback
 
+from benchmarks import (bench_engine, bench_kernels,
+                        bench_operator_selection, bench_parfor,
+                        bench_plan_cache, bench_plan_selection,
+                        bench_roofline, bench_router)
+
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_kernels,
-                            bench_operator_selection, bench_parfor,
-                            bench_plan_cache, bench_plan_selection,
-                            bench_roofline, bench_router)
-
     print("name,us_per_call,derived")
     for mod in (bench_operator_selection, bench_plan_selection,
                 bench_plan_cache, bench_engine, bench_router, bench_parfor,

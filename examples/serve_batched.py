@@ -19,6 +19,7 @@ from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
 from repro.core.planner import compile_plan
 from repro.models.model import build_model
+from repro.runtime.kv_cache import KVCachePool
 from repro.runtime.serve_loop import greedy_decode, make_decode_step
 
 
@@ -52,8 +53,11 @@ def main():
         last_logits, cache = model.prefill(params, prompts, cache_len=context)
     else:
         # enc-dec / modality frontends: no handoff — step the decode path
-        # over the prompt (correct for all families incl. recurrent state)
-        cache = model.init_cache(args.batch, context)
+        # over the prompt (correct for all families incl. recurrent state).
+        # The cache comes from the pool (the one blessed construction
+        # path), same as the serving engine's arenas.
+        pool = KVCachePool(model)
+        cache = pool.acquire(args.batch, context, force=True).cache
         for t in range(args.prompt_len):
             logits, cache = step(params, cache, prompts[:, t:t + 1],
                                  jnp.int32(t))

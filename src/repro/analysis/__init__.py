@@ -1,0 +1,42 @@
+"""Static analysis for the serving stack (SystemML-style plan validation).
+
+Three passes, all CI-gated:
+
+- :mod:`repro.analysis.plan_audit` — walk the closed jaxprs of every
+  compiled decode/prefill step across the arch x dtype x bucket matrix and
+  flag dtype-promotion leaks, host-sync/callback primitives, non-static
+  shapes, and compile-time memory statistics that provably under-estimate
+  the step's resident requirement (a future corrective recompile).
+- :mod:`repro.analysis.lint` — AST rules for the project invariants the
+  runtime enforces by convention (blessed cache/admission helpers, rid
+  minting, import hygiene, tracer host-sync, plan-cache encapsulation).
+- :mod:`repro.analysis.sanitize` — per-tick structural assertions over the
+  live KV pool, engine, and router (``EngineConfig(sanitize=True)``).
+
+This ``__init__`` stays import-light on purpose: ``runtime.engine`` pulls
+in :mod:`repro.analysis.sanitize`, while :mod:`repro.analysis.plan_audit`
+imports the runtime — eager submodule imports here would close that loop.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analysis finding, shared by all passes.
+
+    ``rule`` is the stable identifier (what waivers and tests key on),
+    ``where`` locates it (``path:line`` for lint, a matrix-cell label for
+    the plan auditor, an object path for the sanitizer), and ``detail`` is
+    the human-readable explanation."""
+
+    rule: str
+    where: str
+    detail: str
+    data: Dict = field(default_factory=dict, compare=False)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.detail}"

@@ -1,0 +1,479 @@
+"""Plan auditor: static jaxpr analysis of every compiled serving step.
+
+SystemML catches plan-level hazards by propagating statistics over the
+program *before* execution; this pass does the same for the serving
+stack's compiled steps. For every (arch, dtype, kind, bucket) cell in the
+audit matrix it traces the exact step the scheduler would jit
+(:func:`make_decode_step` / :func:`make_prefill` over the
+:class:`PlanCompiler` plan for that cell) to a closed jaxpr — abstract
+tracing only, no XLA compile, no device arrays — and walks it for:
+
+- **dtype-promotion leaks** (``dtype-leak``): in a reduced-precision plan,
+  (a) float32/float64 *array constants* baked into the step (a clean step
+  closes over nothing — every real array is an input), (b) lax-level
+  promotion edges (an eqn producing f32 from a bf16 input without an
+  explicit ``convert_element_type`` — jnp-level code can't produce these,
+  raw-lax/kernel code can), and (c) f32 leaking into the step's *outputs*:
+  logits off the compute dtype or a cache leaf coming back wider than it
+  went in. Deliberate upcasts (softmax/state accumulation behind
+  ``.astype`` fences) pass all three; this is the exact class behind the
+  historical fp32 corrective recompiles. A scalar f32 literal that is
+  astype'd back before any output is the one shape none of the three can
+  see — jax lowers implicit promotion to the same ``convert_element_type``
+  as a deliberate fence.
+- **host sync / retrace hazards** (``host-sync``, ``dynamic-shape``):
+  callback/infeed/outfeed primitives inside the jitted tick, and any
+  abstract value with a non-static dimension.
+- **memory-statistics validation** (``memory-under-estimate``,
+  ``memory-uncovered``): a liveness scan over the jaxpr yields a
+  *floor* (inputs + outputs that must coexist — no allocator can do
+  better) and a *ceiling* (no-reuse peak, plus the rest of the provisioned
+  pool the step serves next to, plus the same workspace fraction
+  ``estimate_memory`` budgets). The plan's compile-time estimate must sit
+  inside ``[floor, ceiling]``: below the floor it provably under-estimates
+  (a future corrective recompile at serve time), above the ceiling the
+  statistic exceeds even the reuse-free worst case (plans would refuse
+  capacity they have).
+
+Run ``python -m repro.analysis.plan_audit --smoke``: audits the smoke
+matrix, runs the injected-violation self-test (a planted fp32 constant
+and a planted host callback must be flagged), writes
+``ANALYSIS_report.json``, and exits non-zero on any clean-tree finding or
+self-test miss.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.core import Literal
+
+from repro.analysis import Finding
+from repro.config import InputShape, MeshConfig
+from repro.configs import get_config
+from repro.core.planner import PlanCompiler
+from repro.models.model import build_model
+from repro.runtime.serve_loop import make_decode_step, make_prefill
+
+# the CI smoke matrix: one arch per serving family (attention / SSD /
+# RG-LRU hybrid), both serving dtypes, two buckets spanning the pow2 grid
+SMOKE_ARCHS = ("yi-6b-smoke", "mamba2-1.3b-smoke", "recurrentgemma-2b-smoke")
+SMOKE_DTYPES = ("bfloat16", "float32")
+SMOKE_BUCKETS = ((1, 64), (4, 128))
+PAGE_SIZE = 64
+POOL_ARENAS = 4          # what PlanServer provisions by default
+WORKSPACE_FRACTION = 0.08  # mirrors core/memory.py's workspace class
+
+LOW_PRECISION = (jnp.bfloat16, jnp.float16)
+WIDE = (np.dtype("float32"), np.dtype("float64"))
+HOST_SYNC_MARKERS = ("callback", "infeed", "outfeed", "host_")
+REPORT_PATH = "ANALYSIS_report.json"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def sub_jaxprs(eqn) -> List[Any]:
+    """Child jaxprs of a call-like eqn (scan/while/cond/pjit/custom_*)."""
+    subs = []
+    for v in eqn.params.values():
+        if getattr(v, "jaxpr", None) is not None:
+            subs.append(v.jaxpr)
+        elif isinstance(v, (list, tuple)):
+            subs.extend(w.jaxpr for w in v
+                        if getattr(w, "jaxpr", None) is not None)
+    return subs
+
+
+def iter_eqns(jaxpr) -> Iterable[Any]:
+    """Every eqn in ``jaxpr`` and, recursively, in nested bodies."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jx.eqns:
+        yield eqn
+        for sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def aval_bytes(av) -> int:
+    dt = getattr(av, "dtype", None)
+    if dt is None:        # tokens and friends: abstract non-array values
+        return 0
+    n = 1
+    for d in av.shape:
+        n *= int(d)
+    return n * np.dtype(dt).itemsize
+
+
+# ---------------------------------------------------------------------------
+# pass 1: dtype-promotion leaks
+# ---------------------------------------------------------------------------
+
+
+def audit_dtype(closed, out_tree, in_cache, compute_dtype,
+                where: str) -> List[Finding]:
+    """Flag fp32 reachable in a reduced-precision plan (see module doc
+    for the three detectors and the one shape they cannot see)."""
+    if np.dtype(compute_dtype) not in (np.dtype(d) for d in LOW_PRECISION):
+        return []
+    out: List[Finding] = []
+    for c in closed.consts:
+        dt = np.dtype(getattr(c, "dtype", np.float64))
+        if dt in WIDE:
+            shape = getattr(c, "shape", ())
+            out.append(Finding(
+                rule="dtype-leak", where=where,
+                detail=f"{dt.name}{list(shape)} constant baked into a "
+                       f"{np.dtype(compute_dtype).name} step"))
+    for eqn in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name == "convert_element_type" or sub_jaxprs(eqn):
+            continue
+        outs_wide = any(
+            np.dtype(getattr(v.aval, "dtype", np.int32)) in WIDE
+            for v in eqn.outvars)
+        ins_low = any(
+            getattr(v.aval, "dtype", None) == np.dtype(compute_dtype)
+            for v in eqn.invars if hasattr(v, "aval"))
+        if outs_wide and ins_low:
+            out.append(Finding(
+                rule="dtype-leak", where=where,
+                detail=f"primitive {eqn.primitive.name} promotes "
+                       f"{np.dtype(compute_dtype).name} to f32 without an "
+                       f"explicit convert fence"))
+    logits, cache_out = out_tree
+    if np.dtype(logits.dtype) != np.dtype(compute_dtype):
+        out.append(Finding(
+            rule="dtype-leak", where=where,
+            detail=f"logits come out {np.dtype(logits.dtype).name} in a "
+                   f"{np.dtype(compute_dtype).name} plan"))
+    if cache_out is not None:
+        for k, sds in in_cache.items():
+            got = np.dtype(cache_out[k].dtype)
+            want = np.dtype(sds.dtype)
+            if got != want:
+                out.append(Finding(
+                    rule="dtype-leak", where=where,
+                    detail=f"cache leaf {k!r} widens {want.name} -> "
+                           f"{got.name} across the step"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 2: host sync + retrace hazards
+# ---------------------------------------------------------------------------
+
+
+def audit_host_sync(closed, where: str) -> List[Finding]:
+    out: List[Finding] = []
+    for eqn in iter_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if any(m in name for m in HOST_SYNC_MARKERS):
+            out.append(Finding(
+                rule="host-sync", where=where,
+                detail=f"primitive {name} synchronizes with the host "
+                       f"inside the jitted tick"))
+    return out
+
+
+def audit_static_shapes(closed, where: str) -> List[Finding]:
+    out: List[Finding] = []
+    for eqn in iter_eqns(closed.jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            av = getattr(v, "aval", None)
+            if av is None or not hasattr(av, "shape"):
+                continue
+            if any(not isinstance(d, (int, np.integer)) for d in av.shape):
+                out.append(Finding(
+                    rule="dynamic-shape", where=where,
+                    detail=f"non-static dimension in {av} at "
+                           f"{eqn.primitive.name} (retrace hazard)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 3: memory-statistics validation
+# ---------------------------------------------------------------------------
+
+
+def jaxpr_peak_bytes(jaxpr) -> int:
+    """No-reuse peak for one jaxpr body: invars + consts resident
+    throughout, plus a liveness scan over the intermediates (a value is
+    held from its producing eqn to its last use). Call-like eqns
+    contribute their body's own recursive peak while they run."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    resident = sum(aval_bytes(v.aval) for v in jx.invars)
+    resident += sum(aval_bytes(v.aval) for v in jx.constvars)
+    last_use: Dict[Any, int] = {}
+    for i, e in enumerate(jx.eqns):
+        for v in e.invars:
+            if not isinstance(v, Literal):
+                last_use[v] = i
+    for v in jx.outvars:
+        if not isinstance(v, Literal):
+            last_use[v] = len(jx.eqns)
+    live: Dict[Any, int] = {}
+    peak = 0
+    for i, e in enumerate(jx.eqns):
+        body = max((jaxpr_peak_bytes(s) for s in sub_jaxprs(e)), default=0)
+        out_b = sum(aval_bytes(v.aval) for v in e.outvars)
+        peak = max(peak, sum(live.values()) + out_b + body)
+        for v in e.outvars:
+            if last_use.get(v, i) > i:
+                live[v] = aval_bytes(v.aval)
+        live = {v: b for v, b in live.items() if last_use.get(v, -1) > i}
+    return resident + peak
+
+
+def resident_floor_bytes(closed) -> int:
+    """Certified lower bound on the step's peak: its inputs and outputs
+    must coexist (the steps don't donate), whatever XLA does in between."""
+    jx = closed.jaxpr
+    total = sum(aval_bytes(v.aval) for v in jx.invars)
+    total += sum(aval_bytes(v.aval) for v in jx.outvars
+                 if not isinstance(v, Literal))
+    return total
+
+
+def audit_memory(closed, estimate_total: float, pool_slack_bytes: float,
+                 where: str) -> Tuple[Dict[str, Any], List[Finding]]:
+    """Sandwich the plan's compile-time estimate between the certified
+    floor and the reuse-free ceiling (plus pool slack + workspace)."""
+    floor = resident_floor_bytes(closed)
+    ceiling = (jaxpr_peak_bytes(closed.jaxpr) + pool_slack_bytes)
+    ceiling = int(ceiling * (1.0 + WORKSPACE_FRACTION))
+    record = {
+        "floor_bytes": int(floor),
+        "estimate_bytes": float(estimate_total),
+        "ceiling_bytes": int(ceiling),
+        "covered": bool(ceiling >= estimate_total),
+    }
+    findings: List[Finding] = []
+    if estimate_total < floor:
+        findings.append(Finding(
+            rule="memory-under-estimate", where=where,
+            detail=f"estimate {estimate_total:.0f}B below the certified "
+                   f"floor {floor}B — the plan will breach its watermark "
+                   f"and burn a corrective recompile at serve time",
+            data=record))
+    elif not record["covered"]:
+        findings.append(Finding(
+            rule="memory-uncovered", where=where,
+            detail=f"estimate {estimate_total:.0f}B exceeds the reuse-free "
+                   f"ceiling {ceiling}B — the statistic over-provisions "
+                   f"beyond any possible execution",
+            data=record))
+    return record, findings
+
+
+# ---------------------------------------------------------------------------
+# cell tracing
+# ---------------------------------------------------------------------------
+
+
+def trace_cell(model, plan, mesh_cfg, kind: str, batch: int, seq: int,
+               page: int = PAGE_SIZE, wrap=None):
+    """Closed jaxpr + abstract output tree + cache specs for one cell —
+    ShapeDtypeStruct tracing end to end (no params materialized).
+    ``wrap(step)`` lets the self-test plant violations in the step."""
+    params = model.param_specs()
+    if kind == "decode":
+        ent, n_pages, sc = model.paged_cache_entries(batch, seq, page)
+        cache = {k: jax.ShapeDtypeStruct(s, d) for k, (s, a, d) in ent.items()}
+        step = make_decode_step(model, plan.config, mesh_cfg, page=page,
+                                seq_len=seq)
+        if wrap is not None:
+            step = wrap(step)
+        args = [params, cache,
+                jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                jax.ShapeDtypeStruct((batch,), jnp.int32)]
+        if n_pages:
+            args.append(jax.ShapeDtypeStruct((batch, -(-sc // page)),
+                                             jnp.int32))
+        closed = jax.make_jaxpr(step)(*args)
+        out_tree = jax.eval_shape(step, *args)
+        return closed, out_tree, cache
+    step = make_prefill(model, plan.config, mesh_cfg)
+    if wrap is not None:
+        step = wrap(step)
+    batch_in = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+                "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    closed = jax.make_jaxpr(step)(params, batch_in)
+    out_tree = jax.eval_shape(step, params, batch_in)
+    return closed, out_tree, None
+
+
+def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
+               page: int = PAGE_SIZE, pool_arenas: int = POOL_ARENAS,
+               wrap=None) -> Tuple[Dict[str, Any], List[Finding]]:
+    """Compile the plan and audit the traced step for one matrix cell."""
+    where = f"{arch}/{dtype}/{kind}/b{batch}s{seq}"
+    cfg = get_config(arch)
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    model = build_model(cfg, dtype=dtype)
+    compiler = PlanCompiler(cache_page_size=page,
+                            cache_pool_arenas=pool_arenas)
+    shape = InputShape(f"req_{batch}x{seq}", seq, batch, kind)
+    plan = compiler.compile(cfg, shape, mesh_cfg, dtype=dtype)
+    closed, out_tree, cache = trace_cell(model, plan, mesh_cfg, kind,
+                                         batch, seq, page=page, wrap=wrap)
+    findings: List[Finding] = []
+    if kind == "decode":
+        findings += audit_dtype(closed, out_tree, cache, model.dtype, where)
+    findings += audit_host_sync(closed, where)
+    findings += audit_static_shapes(closed, where)
+    # the step serves next to the rest of the provisioned pool: slack is
+    # (pool_arenas - 1) decode arenas of this bucket
+    ent = model.cache_entries(batch, seq)
+    arena_bytes = sum(int(np.prod(s)) * np.dtype(d).itemsize
+                      for s, a, d in ent.values())
+    mem, mem_findings = audit_memory(
+        closed, plan.memory.total if plan.memory else 0.0,
+        (pool_arenas - 1) * arena_bytes, where)
+    findings += mem_findings
+    record = {
+        "arch": arch, "dtype": dtype, "kind": kind,
+        "batch": batch, "seq": seq,
+        "eqns": sum(1 for _ in iter_eqns(closed.jaxpr)),
+        "memory": mem,
+        "findings": len(findings),
+    }
+    return record, findings
+
+
+def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
+              dtypes: Sequence[str] = SMOKE_DTYPES,
+              buckets: Sequence[Tuple[int, int]] = SMOKE_BUCKETS,
+              kinds: Sequence[str] = ("decode", "prefill"),
+              page: int = PAGE_SIZE,
+              pool_arenas: int = POOL_ARENAS,
+              log=None) -> Tuple[List[Dict[str, Any]], List[Finding]]:
+    cells: List[Dict[str, Any]] = []
+    findings: List[Finding] = []
+    for arch in archs:
+        for dtype in dtypes:
+            for kind in kinds:
+                if kind == "prefill" and not build_model(
+                        get_config(arch), dtype=dtype).supports_handoff:
+                    continue   # modality frontends prefill out of band
+                for batch, seq in buckets:
+                    rec, found = audit_cell(arch, dtype, kind, batch, seq,
+                                            page=page,
+                                            pool_arenas=pool_arenas)
+                    cells.append(rec)
+                    findings.extend(found)
+                    if log:
+                        log(f"  {rec['arch']}/{rec['dtype']}/{rec['kind']}"
+                            f"/b{batch}s{seq}: {rec['eqns']} eqns, "
+                            f"{rec['findings']} finding(s)")
+    return cells, findings
+
+
+# ---------------------------------------------------------------------------
+# self-test: planted violations the auditor must flag
+# ---------------------------------------------------------------------------
+
+
+def _wrap_fp32_const(step):
+    """Plant the historical bug: an fp32 array constant baked into a bf16
+    decode step (converted back afterwards, so only the constant and the
+    transient promotion betray it)."""
+    bias = np.linspace(0.0, 0.1, 8, dtype=np.float32)
+
+    def wrapped(params, cache, tokens, pos, tables=None):
+        args = (params, cache, tokens, pos) + (
+            (tables,) if tables is not None else ())
+        logits, cache_out = step(*args)
+        leaked = logits + jnp.asarray(bias).sum()
+        return leaked.astype(logits.dtype), cache_out
+
+    return wrapped
+
+
+def _wrap_host_callback(step):
+    """Plant a host callback inside the jitted tick."""
+
+    def wrapped(params, cache, tokens, pos, tables=None):
+        args = (params, cache, tokens, pos) + (
+            (tables,) if tables is not None else ())
+        logits, cache_out = step(*args)
+        jax.debug.callback(lambda x: None, logits)
+        return logits, cache_out
+
+    return wrapped
+
+
+def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
+    """Verify the detectors on planted violations (and a clean control)
+    in a bf16 decode step. Returns per-probe pass/fail."""
+    _, clean = audit_cell(arch, "bfloat16", "decode", 2, 64)
+    _, fp32 = audit_cell(arch, "bfloat16", "decode", 2, 64,
+                         wrap=_wrap_fp32_const)
+    _, cb = audit_cell(arch, "bfloat16", "decode", 2, 64,
+                       wrap=_wrap_host_callback)
+    return {
+        "clean_control": not clean,
+        "fp32_const_flagged": any(f.rule == "dtype-leak" for f in fp32),
+        "host_callback_flagged": any(f.rule == "host-sync" for f in cb),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static jaxpr audit of every compiled serving step")
+    ap.add_argument("--smoke", action="store_true",
+                    help="audit the CI smoke matrix (archs x dtypes x "
+                         "buckets) plus the injected-violation self-test")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="override the arch list")
+    ap.add_argument("--report", default=REPORT_PATH,
+                    help=f"JSON report path (default {REPORT_PATH})")
+    ap.add_argument("--no-selftest", action="store_true",
+                    help="skip the planted-violation self-test")
+    args = ap.parse_args(argv)
+
+    archs = tuple(args.archs) if args.archs else SMOKE_ARCHS
+    print(f"plan_audit: {len(archs)} arch(s) x {len(SMOKE_DTYPES)} dtypes "
+          f"x {len(SMOKE_BUCKETS)} buckets")
+    cells, findings = run_audit(archs=archs, log=print)
+
+    st: Dict[str, Any] = {}
+    if not args.no_selftest:
+        st = selftest()
+        for probe, ok in st.items():
+            print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
+
+    report = {
+        "matrix": {"archs": list(archs), "dtypes": list(SMOKE_DTYPES),
+                   "buckets": [list(b) for b in SMOKE_BUCKETS]},
+        "cells": cells,
+        "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
+                     for f in findings],
+        "selftest": st,
+    }
+    Path(args.report).write_text(json.dumps(report, indent=2))
+
+    for f in findings:
+        print(f)
+    missed = [k for k, ok in st.items() if not ok]
+    print(f"plan_audit: {len(cells)} cells, {len(findings)} finding(s), "
+          f"report -> {args.report}")
+    if missed:
+        print(f"plan_audit: self-test MISSED: {', '.join(missed)}")
+    return 1 if findings or missed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -79,6 +79,7 @@ def _pad(x: int, b: int) -> int:
 
 
 def pltpu_scratch(bm, bn):
-    from jax.experimental.pallas import tpu as pltpu
+    # deferred: pallas.tpu only resolves on TPU-capable installs
+    from jax.experimental.pallas import tpu as pltpu  # lint: allow-local-import
 
     return pltpu.VMEM((bm, bn), jnp.float32)

@@ -286,6 +286,12 @@ def main():
                     help="scheduler mode: cancel each request after its "
                          "N-th streamed token (simulated client disconnect; "
                          "0 disables)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime sanitizer: re-derive pool/page/handle "
+                         "invariants from scratch after every tick and "
+                         "fail fast on the first drift (page double-lease, "
+                         "orphaned pages, live-bytes drift, leaked event "
+                         "buffers) instead of serving corrupt state")
     args = ap.parse_args()
 
     if args.scheduler:

@@ -264,7 +264,7 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jnp.ndarray, ctx: ShardCtx):
     while t % g_cnt != 0:
         g_cnt //= 2
     tg = t // g_cnt
-    cap = int(tg * kk * cfg.moe_capacity_factor / e) + 1
+    cap = int(tg * kk * cfg.moe_capacity_factor / e) + 1  # lint: allow-tracer-host-sync (static shape math)
     cap = max(8, -(-cap // 8) * 8)
 
     tables = jax.vmap(lambda fe: _routing_tables(fe, e, cap, kk))(

@@ -470,7 +470,7 @@ class Model:
         if lengths is None:
             lengths = jnp.full((b,), s, jnp.int32)
         lengths = jnp.asarray(lengths, jnp.int32)
-        cache_len = int(cache_len) if cache_len else s
+        cache_len = int(cache_len) if cache_len else s  # lint: allow-tracer-host-sync (static python int)
         x = self._embed(params, tokens)
         positions = jnp.arange(s)
         if cfg.family == "hybrid":

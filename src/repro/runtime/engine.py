@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitize import assert_engine
 from repro.config import InputShape
 from repro.core.plan_cache import BucketPolicy, CacheEntry, bucket_pow2
 from repro.runtime.engine_config import (_UNSET, EngineConfig,
@@ -632,9 +633,18 @@ class ServingEngine:
                 if group.done:
                     self._retire_group(group)
                     self.active.remove(group)
+            self._sanitize()
             return self._tick_sink
         finally:
             self._tick_sink = None
+
+    def _sanitize(self) -> None:
+        """Runtime sanitizer hook: under ``EngineConfig(sanitize=True)``
+        cross-check pool/arena/handle invariants from scratch after every
+        state transition and raise :class:`SanitizeError` on the first
+        drifted tick instead of serving corrupt state."""
+        if self.config.sanitize:
+            assert_engine(self)
 
     def events(self) -> Iterator[TokenEvent]:
         """Yield token events as they are produced, stepping the engine
@@ -686,11 +696,13 @@ class ServingEngine:
                                   step=0, done=True,
                                   finish_reason="cancelled"))
             self.handles.pop(qr.rid, None)
+            self._sanitize()
             return True
         for group in self.active:
             for m in group.members:
                 if m.qr.rid == handle.rid and not m.done:
                     self._complete(m, group, now, "cancelled")
+                    self._sanitize()
                     return True
         return False
 
@@ -763,6 +775,7 @@ class ServingEngine:
         self._page_denied_rids.discard(handle.rid)
         handle.state = "withdrawn"
         handle._events.clear()
+        self._sanitize()
         return qr
 
     def discard(self, handle: RequestHandle) -> None:

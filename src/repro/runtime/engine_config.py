@@ -26,6 +26,8 @@ import warnings
 from dataclasses import dataclass, fields, replace
 from typing import Any, Optional
 
+import jax.numpy as jnp
+
 # sentinel for "caller did not pass this legacy kwarg" — None is a real
 # value for several of them (eos_id-style), so absence needs its own mark
 _UNSET: Any = object()
@@ -33,6 +35,15 @@ _UNSET: Any = object()
 # (owner, kwarg) pairs already warned about — deprecation noise once per
 # process per call-site vocabulary, not once per constructed object
 _WARNED: set = set()
+
+
+def reset_legacy_kwarg_warnings() -> None:
+    """Clear the once-per-(owner, kwarg) deprecation registry. The
+    registry is process-global on purpose (one warning per call-site
+    vocabulary, not per object), which makes warning-behaviour tests
+    order-dependent — a fixture calls this so every test starts from the
+    never-warned state."""
+    _WARNED.clear()
 
 
 def fold_legacy_kwargs(config: Optional["EngineConfig"], owner: str,
@@ -92,6 +103,11 @@ class EngineConfig:
     replicas: int = 1
     placement: str = "affinity"       # "affinity" | "load"
 
+    # -- diagnostics -------------------------------------------------------
+    # per-tick structural assertions over pool/engine/router state
+    # (repro.analysis.sanitize); pure host-side walks, no device sync
+    sanitize: bool = False
+
     def __post_init__(self):
         if self.dtype not in ("float32", "bfloat16"):
             raise ValueError(f"dtype must be float32|bfloat16, "
@@ -104,10 +120,23 @@ class EngineConfig:
                              f"got {self.placement!r}")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if self.cache_capacity < 1:
+            raise ValueError("cache_capacity must be >= 1")
+        if self.recompile_margin < 0:
+            raise ValueError("recompile_margin must be >= 0")
+        if self.page_size < 0:
+            raise ValueError("page_size must be >= 0 (0 = row-granular)")
+        if self.pool_arenas < 1:
+            raise ValueError("pool_arenas must be >= 1")
+        if self.pool_max_arenas < 0 or self.pool_max_bytes < 0:
+            raise ValueError("pool caps must be >= 0 (0 = unbounded)")
+        if self.max_group_batch < 1:
+            raise ValueError("max_group_batch must be >= 1")
+        if self.slo_ms < 0:
+            raise ValueError("slo_ms must be >= 0")
 
     # ------------------------------------------------------------------
     def jnp_dtype(self):
-        import jax.numpy as jnp
         return jnp.float32 if self.dtype == "float32" else jnp.bfloat16
 
     @classmethod
@@ -127,11 +156,11 @@ class EngineConfig:
     # -- builders (function-local imports break the layering cycle:
     # serve_loop/engine/router all import *this* module) -------------------
     def build_server(self, model_cfg, mesh_cfg=None, **kw):
-        from repro.runtime.serve_loop import PlanServer
+        from repro.runtime.serve_loop import PlanServer  # lint: allow-local-import
         return PlanServer(model_cfg, mesh_cfg, config=self, **kw)
 
     def build_engine(self, server, *, clock=None, **kw):
-        from repro.runtime.engine import ServingEngine
+        from repro.runtime.engine import ServingEngine  # lint: allow-local-import
         return ServingEngine(server, config=self, clock=clock, **kw)
 
     def build_client(self, model_cfg, mesh_cfg=None, *, servers=None):
@@ -144,5 +173,5 @@ class EngineConfig:
                        for _ in range(max(1, self.replicas))]
         if self.replicas <= 1:
             return self.build_engine(servers[0])
-        from repro.runtime.router import EngineRouter
+        from repro.runtime.router import EngineRouter  # lint: allow-local-import
         return EngineRouter(servers, config=self)

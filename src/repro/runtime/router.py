@@ -46,6 +46,7 @@ from dataclasses import replace as dc_replace
 from typing import (TYPE_CHECKING, Any, Deque, Dict, Iterable, Iterator,
                     List, Optional, Sequence, Tuple)
 
+from repro.analysis.sanitize import assert_router
 from repro.core.plan_cache import bucket_pow2
 from repro.runtime.engine import (ReplicaClock, RequestHandle, ServingEngine,
                                   TokenEvent)
@@ -214,7 +215,15 @@ class EngineRouter:
         busy = [r for r in self.replicas if not r.engine.idle]
         for r in sorted(busy, key=lambda r: (r.clock.now(), r.idx)):
             out.extend(self._step_replica(r))
+        self._sanitize()
         return out
+
+    def _sanitize(self) -> None:
+        """Fleet-level sanitizer hook (``EngineConfig(sanitize=True)``):
+        every replica's pool/handle invariants plus router-level placement
+        and delivery bookkeeping, re-derived from scratch each tick."""
+        if self.config.sanitize:
+            assert_router(self)
 
     def _rebalance(self) -> None:
         """Work stealing: placement is one-shot, so a replica that
@@ -328,6 +337,7 @@ class EngineRouter:
             h.resubmits += 1
             self.router_metrics.resubmitted += 1
             moved.append(h)
+        self._sanitize()
         return moved
 
     def restore_replica(self, idx: int) -> None:

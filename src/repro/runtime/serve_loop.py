@@ -137,7 +137,7 @@ class ServeRequest:
 
 
 def _tree_bytes(tree) -> float:
-    return float(sum(x.nbytes for x in jax.tree.leaves(tree)
+    return float(sum(x.nbytes for x in jax.tree.leaves(tree)  # lint: allow-tracer-host-sync (host-side sizing)
                      if hasattr(x, "nbytes")))
 
 
@@ -202,7 +202,7 @@ class PlanServer:
         self._params_bytes = _tree_bytes(self.params)
         # block-granular paged arenas (0 = row-granular PR-3 behaviour):
         # rows commit pages, not bucket-shaped sequence slack
-        self.page_size = max(0, int(c.page_size))
+        self.page_size = max(0, int(c.page_size))  # lint: allow-tracer-host-sync (config int)
         # compile-time cache statistics are sized for a pool provisioned
         # with ``pool_arenas`` concurrent bucket arenas; the pool's live
         # bytes are checked against them at observe() time

@@ -2,10 +2,23 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 # Tests run single-device (the dry-run owns the 512-device setup; see
 # src/repro/launch/dryrun.py). Multi-device behaviours are tested through
 # subprocesses that set XLA_FLAGS before importing jax.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_legacy_kwarg_warnings():
+    """fold_legacy_kwargs warns once per process per call site; reset the
+    registry before every test so pytest.warns assertions hold regardless
+    of test order (imported lazily: multidev subprocess helpers must not
+    force jax in before they set XLA_FLAGS)."""
+    from repro.runtime.engine_config import reset_legacy_kwarg_warnings
+    reset_legacy_kwarg_warnings()
+    yield
 
 MULTIDEV_PRELUDE = """
 import os

@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_config
 from repro.runtime.engine import (EngineClient, RequestQueue, ServingEngine,
                                   WallClock)
-from repro.runtime.engine_config import _WARNED, EngineConfig
+from repro.runtime.engine_config import EngineConfig
 from repro.runtime.router import EngineRouter
 from repro.runtime.scheduler import (ContinuousBatchingScheduler,
                                      simulate_arrivals)
@@ -44,7 +44,7 @@ def fleet_servers():
 
 
 def test_legacy_kwargs_fold_into_config_and_warn():
-    _WARNED.clear()  # once-per-process warnings; make this test order-proof
+    # conftest's autouse fixture resets the once-per-process registry
     with pytest.warns(DeprecationWarning, match="PlanServer"):
         srv = PlanServer(CFG, dtype=jnp.float32, capacity=4)
     assert srv.config.cache_capacity == 4
