@@ -34,6 +34,16 @@ tracing only, no XLA compile, no device arrays — and walks it for:
   (a future corrective recompile at serve time), above the ceiling the
   statistic exceeds even the reuse-free worst case (plans would refuse
   capacity they have).
+- **decode-kernel selection** (``kernel-choice``): every decode cell is
+  audited under both forced physical operators (``paged`` and ``gather``)
+  and the record carries the kernel the plan actually selected, so the
+  matrix asserts the choice per cell; a forced compiler whose plan records
+  a different operator is flagged, and — the silent perf cliff — a
+  long-context paged decode plan (seq beyond ``LONG_CONTEXT_THRESHOLD``)
+  that is *not* running the fused paged kernel pays the gather
+  materialization's ``(2 + 2 q_per_kv)x`` cache traffic on every step
+  without any numerical signal, so :func:`check_kernel_choice` flags it
+  statically (no tracing needed).
 
 Run ``python -m repro.analysis.plan_audit --smoke``: audits the smoke
 matrix, runs the injected-violation self-test (a planted fp32 constant
@@ -58,7 +68,7 @@ from jax._src.core import Literal
 from repro.analysis import Finding
 from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
-from repro.core.planner import PlanCompiler
+from repro.core.planner import LONG_CONTEXT_THRESHOLD, PlanCompiler
 from repro.models.model import build_model
 from repro.runtime.serve_loop import make_decode_step, make_prefill
 
@@ -274,6 +284,50 @@ def audit_memory(closed, estimate_total: float, pool_slack_bytes: float,
 
 
 # ---------------------------------------------------------------------------
+# pass 4: decode-kernel selection
+# ---------------------------------------------------------------------------
+
+
+def check_kernel_choice(model, config, shape, page: int,
+                        where: str, forced: str = "auto") -> List[Finding]:
+    """Static checks over the plan's recorded decode kernel — pure plan
+    metadata, no tracing. ``model`` is the :class:`ModelConfig`, ``config``
+    the chosen :class:`PlanConfig`, ``forced`` the compiler's kernel knob.
+
+    Two rules: a forced compiler must record what it was forced to (except
+    attention-free families, where ``none`` is the only honest answer);
+    and a long-context paged decode plan must be running the fused paged
+    kernel — at those buckets the gather path materializes the committed
+    cache plus its ``q_per_kv``-repeated expansion every step, the exact
+    traffic cliff the operator-selection tentpole exists to avoid."""
+    out: List[Finding] = []
+    if shape.kind != "decode":
+        return out
+    attention_free = model.layer_pattern().count("a") == 0
+    if attention_free:
+        if config.decode_kernel != "none":
+            out.append(Finding(
+                rule="kernel-choice", where=where,
+                detail=f"attention-free family records decode kernel "
+                       f"{config.decode_kernel!r} (expected 'none')"))
+        return out
+    if forced != "auto" and config.decode_kernel != forced:
+        out.append(Finding(
+            rule="kernel-choice", where=where,
+            detail=f"compiler forced decode kernel {forced!r} but the "
+                   f"plan records {config.decode_kernel!r}"))
+    if (page > 0 and shape.seq_len > LONG_CONTEXT_THRESHOLD
+            and config.decode_kernel != "paged"):
+        out.append(Finding(
+            rule="kernel-choice", where=where,
+            detail=f"long-context decode plan (seq {shape.seq_len}) runs "
+                   f"{config.decode_kernel!r}, not the fused paged kernel "
+                   f"— every step pays the gather materialization's "
+                   f"{2 + 2 * model.q_per_kv}x cache traffic"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # cell tracing
 # ---------------------------------------------------------------------------
 
@@ -312,14 +366,20 @@ def trace_cell(model, plan, mesh_cfg, kind: str, batch: int, seq: int,
 
 def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
                page: int = PAGE_SIZE, pool_arenas: int = POOL_ARENAS,
+               decode_kernel: str = "auto",
                wrap=None) -> Tuple[Dict[str, Any], List[Finding]]:
-    """Compile the plan and audit the traced step for one matrix cell."""
+    """Compile the plan and audit the traced step for one matrix cell.
+    ``decode_kernel`` is the compiler knob: the matrix runs decode cells
+    under both forced operators so each physical read path is traced."""
     where = f"{arch}/{dtype}/{kind}/b{batch}s{seq}"
+    if kind == "decode" and decode_kernel != "auto":
+        where += f"/{decode_kernel}"
     cfg = get_config(arch)
     mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
     model = build_model(cfg, dtype=dtype)
     compiler = PlanCompiler(cache_page_size=page,
-                            cache_pool_arenas=pool_arenas)
+                            cache_pool_arenas=pool_arenas,
+                            decode_kernel=decode_kernel)
     shape = InputShape(f"req_{batch}x{seq}", seq, batch, kind)
     plan = compiler.compile(cfg, shape, mesh_cfg, dtype=dtype)
     closed, out_tree, cache = trace_cell(model, plan, mesh_cfg, kind,
@@ -329,6 +389,8 @@ def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
         findings += audit_dtype(closed, out_tree, cache, model.dtype, where)
     findings += audit_host_sync(closed, where)
     findings += audit_static_shapes(closed, where)
+    findings += check_kernel_choice(cfg, plan.config, shape, page, where,
+                                    forced=decode_kernel)
     # the step serves next to the rest of the provisioned pool: slack is
     # (pool_arenas - 1) decode arenas of this bucket
     ent = model.cache_entries(batch, seq)
@@ -341,6 +403,10 @@ def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
     record = {
         "arch": arch, "dtype": dtype, "kind": kind,
         "batch": batch, "seq": seq,
+        # what the plan actually chose (vs the compiler knob): the matrix
+        # asserts the selected physical operator per cell
+        "decode_kernel": plan.config.decode_kernel,
+        "forced_kernel": decode_kernel,
         "eqns": sum(1 for _ in iter_eqns(closed.jaxpr)),
         "memory": mem,
         "findings": len(findings),
@@ -363,16 +429,24 @@ def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
                 if kind == "prefill" and not build_model(
                         get_config(arch), dtype=dtype).supports_handoff:
                     continue   # modality frontends prefill out of band
+                # decode cells run under both forced operators so both
+                # physical read paths are traced and asserted; prefill has
+                # no decode-attention operator to choose
+                kernels = ("paged", "gather") if kind == "decode" else ("auto",)
                 for batch, seq in buckets:
-                    rec, found = audit_cell(arch, dtype, kind, batch, seq,
-                                            page=page,
-                                            pool_arenas=pool_arenas)
-                    cells.append(rec)
-                    findings.extend(found)
-                    if log:
-                        log(f"  {rec['arch']}/{rec['dtype']}/{rec['kind']}"
-                            f"/b{batch}s{seq}: {rec['eqns']} eqns, "
-                            f"{rec['findings']} finding(s)")
+                    for dk in kernels:
+                        rec, found = audit_cell(arch, dtype, kind, batch,
+                                                seq, page=page,
+                                                pool_arenas=pool_arenas,
+                                                decode_kernel=dk)
+                        cells.append(rec)
+                        findings.extend(found)
+                        if log:
+                            log(f"  {rec['arch']}/{rec['dtype']}"
+                                f"/{rec['kind']}/b{batch}s{seq}"
+                                f"[{dk}]: {rec['eqns']} eqns, kernel="
+                                f"{rec['decode_kernel']}, "
+                                f"{rec['findings']} finding(s)")
     return cells, findings
 
 
@@ -418,10 +492,26 @@ def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
                          wrap=_wrap_fp32_const)
     _, cb = audit_cell(arch, "bfloat16", "decode", 2, 64,
                        wrap=_wrap_host_callback)
+
+    # planted kernel-choice violation: a long-context plan whose paged
+    # kernel was silently dropped must flag (and the honest plan must not)
+    cfg = get_config("yi-6b")
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    shape = InputShape("probe", LONG_CONTEXT_THRESHOLD + 1, 8, "decode")
+    plan = PlanCompiler(cache_page_size=PAGE_SIZE,
+                        cache_pool_arenas=POOL_ARENAS).compile(
+        cfg, shape, mesh_cfg, dtype="bfloat16")
+    doctored = plan.config.replace(decode_kernel="gather")
+    flagged = check_kernel_choice(cfg, doctored, shape, PAGE_SIZE,
+                                  "selftest/long-context")
+    honest = check_kernel_choice(cfg, plan.config, shape, PAGE_SIZE,
+                                 "selftest/long-context")
     return {
         "clean_control": not clean,
         "fp32_const_flagged": any(f.rule == "dtype-leak" for f in fp32),
         "host_callback_flagged": any(f.rule == "host-sync" for f in cb),
+        "paged_kernel_absent_flagged": (
+            any(f.rule == "kernel-choice" for f in flagged) and not honest),
     }
 
 

@@ -22,8 +22,15 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig
-from repro.core.memory import ACT_BYTES, PARAM_BYTES, _cache_dense_bytes
+from repro.core.memory import ACT_BYTES, PARAM_BYTES, _cache_dense_bytes, _cache_eff_seq
 from repro.core.strategies import PlanConfig
+
+# Paged-kernel grid dispatch cost per (layer, row, kv-head, page) grid step,
+# in seconds. TPU grid steps are pipelined DMAs, not kernel launches, so the
+# constant is tens of nanoseconds — but it keeps the selection a genuine
+# comparison (SystemML-style operator selection by data characteristics,
+# not a fixed winner): a bucket with many tiny pages pays it linearly.
+PAGED_STEP_LATENCY_S = 2e-8
 
 
 @dataclass
@@ -126,12 +133,67 @@ def _attention_flops(model: ModelConfig, shape: InputShape) -> float:
     return flops
 
 
+def decode_attention_traffic(
+    model: ModelConfig,
+    shape: InputShape,
+    kernel: str,
+    committed_frac: float = 1.0,
+) -> float:
+    """Decode-attention HBM bytes for one physical operator choice.
+
+    The three operators move very different amounts of cache-sized data
+    per decode step (C = committed KV bytes, g = query heads per kv head):
+
+    - ``paged``:  the fused kernel streams committed pages straight from
+      the slot stack — C * committed_frac, no intermediates.
+    - ``gather``: jnp indexing materializes the gathered copy (write) and
+      the GQA-expanded copy (write + read) on top of the base stream:
+      (2 + 2g) * C, uncommitted bucket slots included regardless of pos.
+    - ``ref``:    the oracle path, same shape of traffic in fp32: 2x gather.
+    """
+    c = _cache_dense_bytes(model, shape.seq_len, shape.global_batch)
+    if kernel == "paged":
+        return c * committed_frac
+    mult = 2.0 + 2.0 * model.q_per_kv
+    if kernel == "ref":
+        mult *= 2.0
+    return c * mult
+
+
+def _paged_grid_steps(model: ModelConfig, shape: InputShape, page: int) -> float:
+    """Grid steps per decode step: one per (attn layer, row, kv head, page)."""
+    n_attn = model.layer_pattern().count("a")
+    pages = -(-_cache_eff_seq(model, shape.seq_len) // page)
+    return n_attn * shape.global_batch * model.num_kv_heads * pages
+
+
+def decode_kernel_seconds(
+    model: ModelConfig,
+    shape: InputShape,
+    hw: HardwareSpec,
+    kernel: str,
+    page: int,
+    committed_frac: float = 1.0,
+) -> float:
+    """Analytic decode-attention term (seconds) for one operator choice.
+
+    This is the quantity :class:`~repro.core.planner.PlanCompiler` compares
+    to *choose* the decode kernel per bucket: page count, window (via the
+    effective cached sequence), batch, and head dims all enter.
+    """
+    t = decode_attention_traffic(model, shape, kernel, committed_frac) / hw.hbm_bandwidth
+    if kernel == "paged" and page > 0:
+        t += _paged_grid_steps(model, shape, page) * PAGED_STEP_LATENCY_S
+    return t
+
+
 def analytic_cost(
     model: ModelConfig,
     shape: InputShape,
     mesh: MeshConfig,
     plan: PlanConfig,
     hw: HardwareSpec,
+    page: int = 0,
 ) -> CostEstimate:
     chips = mesh.num_devices
     mf = model_flops_per_step(model, shape)
@@ -144,7 +206,11 @@ def analytic_cost(
     act_traffic = tokens * model.d_model * ACT_BYTES * model.num_layers * 6
     hbm = p_bytes * (3 if shape.kind == "train" else 1) + act_traffic
     if shape.kind == "decode":
-        hbm += _cache_dense_bytes(model, shape.seq_len, shape.global_batch)
+        hbm += decode_attention_traffic(model, shape, plan.decode_kernel)
+        if plan.decode_kernel == "paged" and page > 0:
+            # grid dispatch overhead, folded in as equivalent HBM bytes so
+            # the roofline terms stay in one currency
+            hbm += _paged_grid_steps(model, shape, page) * PAGED_STEP_LATENCY_S * hw.hbm_bandwidth
 
     coll = _collective_bytes(model, shape, mesh, plan)
     return roofline_terms(flops, hbm, coll, chips, hw, model_flops=mf)

@@ -27,8 +27,8 @@ from repro.config import (
     ModelConfig,
     TrainConfig,
 )
-from repro.core.cost import analytic_cost
-from repro.core.memory import cache_page_count, estimate_memory
+from repro.core.cost import analytic_cost, decode_kernel_seconds
+from repro.core.memory import ACT_BYTES, cache_page_count, estimate_memory
 from repro.core.strategies import ExecutionPlan, PlanConfig, RuntimeStats, Strategy
 
 LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
@@ -36,7 +36,8 @@ LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
 
 class PlanCompiler:
     def __init__(self, hw: HardwareSpec = TPU_V5E, headroom: float = 0.9,
-                 cache_pool_arenas: int = 1, cache_page_size: int = 0):
+                 cache_pool_arenas: int = 1, cache_page_size: int = 0,
+                 decode_kernel: str = "auto"):
         self.hw = hw
         self.headroom = headroom
         # decode statistics are sized for a KV-cache pool provisioned for
@@ -47,6 +48,45 @@ class PlanCompiler:
         # what the pool's page-exact live bytes are compared against.
         self.cache_pool_arenas = cache_pool_arenas
         self.cache_page_size = cache_page_size
+        # "auto": pick the physical decode-attention operator per bucket
+        # from the analytic cost terms; anything else forces that operator
+        # on every decode plan (the --decode-kernel escape hatch).
+        if decode_kernel not in ("auto", "paged", "gather", "ref"):
+            raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
+        self.decode_kernel = decode_kernel
+
+    def _select_decode_kernel(
+        self, model: ModelConfig, shape: InputShape,
+        committed_frac: float = 1.0,
+    ) -> str:
+        """SystemML-style operator selection for the decode hot path.
+
+        Data characteristics decide: page count and window (via the
+        effective cached sequence), batch, and head dims enter through the
+        analytic cost terms in :mod:`repro.core.cost`; the VMEM fit of one
+        physical page plays SystemML's device-memory-fit test. Worst-case
+        commitment (``committed_frac=1``) at compile time; dynamic
+        recompilation re-enters with the observed fraction.
+        """
+        if model.layer_pattern().count("a") == 0:
+            return "none"  # attention-free family: no decode-attention op
+        if self.decode_kernel != "auto":
+            return self.decode_kernel
+        page = self.cache_page_size
+        if shape.kind != "decode" or page <= 0:
+            return "gather"  # dense (non-paged) serving path
+        # device-memory fit of the kernel's per-block set: one K and one V
+        # physical page + the (g, D) query group + f32 accumulator scratch
+        d = model.head_dim
+        g = model.q_per_kv
+        blk = 2 * page * d * ACT_BYTES + g * d * ACT_BYTES + g * (d + 2) * 4
+        if blk > self.hw.vmem_bytes * 0.8:
+            return "gather"
+        paged_s = decode_kernel_seconds(model, shape, self.hw, "paged", page,
+                                        committed_frac)
+        gather_s = decode_kernel_seconds(model, shape, self.hw, "gather", page,
+                                         committed_frac)
+        return "paged" if paged_s < gather_s else "gather"
 
     def _cache_kwargs(self, model: ModelConfig, shape: InputShape) -> dict:
         kw = {"cache_pool_arenas": self.cache_pool_arenas}
@@ -102,7 +142,11 @@ class PlanCompiler:
                                          **self._cache_kwargs(model, shape))
             if mem_scale != 1.0:
                 chosen_mem = chosen_mem.scaled(mem_scale)
-        cost = analytic_cost(model, shape, mesh, chosen, self.hw)
+        if shape.kind == "decode":
+            chosen = chosen.replace(
+                decode_kernel=self._select_decode_kernel(model, shape))
+        cost = analytic_cost(model, shape, mesh, chosen, self.hw,
+                             page=self.cache_page_size)
         return ExecutionPlan(
             model=model, shape=shape, mesh=mesh, config=chosen,
             memory=chosen_mem, cost=cost, dtype=dtype,
@@ -157,6 +201,30 @@ class PlanCompiler:
             kv_est = plan.memory.per_device.get("kv_cache", 0.0)
             if 0 < kv_est < stats.cache_pool_bytes:
                 plan.memory.per_device["kv_cache"] = float(stats.cache_pool_bytes)
+        # Decode-kernel re-selection with *observed* page commitment: the
+        # compile-time choice assumed every row at bucket depth; if the
+        # observed committed pages per row diverge, the cost comparison is
+        # re-run with the real fraction and can flip the physical operator
+        # (the fused kernel skips uncommitted pages, the gather cannot).
+        if (shape.kind == "decode" and stats.committed_pages_per_row
+                and self.cache_page_size):
+            worst = cache_page_count(
+                prior.model, shape.seq_len, shape.global_batch,
+                self.cache_page_size) / max(1, shape.global_batch)
+            frac = min(1.0, stats.committed_pages_per_row / max(1.0, worst))
+            kernel = self._select_decode_kernel(prior.model, shape, frac)
+            if kernel != plan.config.decode_kernel:
+                plan.config = plan.config.replace(
+                    decode_kernel=kernel,
+                    notes=plan.config.notes + (
+                        f"decode kernel flipped to {kernel}: observed "
+                        f"{stats.committed_pages_per_row:.1f}/{worst:.0f} "
+                        "pages/row",
+                    ),
+                )
+                plan.cost = analytic_cost(prior.model, shape, prior.mesh,
+                                          plan.config, self.hw,
+                                          page=self.cache_page_size)
         plan.config = plan.config.replace(
             notes=plan.config.notes
             + (f"dynamic recompilation: runtime stats correction x{scale:.2f}",)

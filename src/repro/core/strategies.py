@@ -60,6 +60,12 @@ class PlanConfig:
     microbatches: int = 1                     # gradient-accumulation chunks
     attention_variant: str = "full"           # full | window | none
     # -- operator variants chosen by format dispatch -----------------------
+    # Physical decode-attention operator for paged serving buckets, chosen
+    # per bucket by the compiler from the analytic cost terms (SystemML's
+    # operator selection by data characteristics): "paged" = fused Pallas
+    # kernel resolving page tables in-kernel; "gather" = jnp gather +
+    # dense decode attention; "ref" = pure-jnp oracle path.
+    decode_kernel: str = "gather"             # paged | gather | ref
     notes: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "PlanConfig":
@@ -88,6 +94,12 @@ class RuntimeStats:
     shape: InputShape
     watermark_bytes: float = 0.0
     cache_pool_bytes: float = 0.0
+    # Observed committed KV pages per request row (0 = not observed).
+    # Compile-time kernel selection assumes worst-case commitment (every
+    # row at bucket depth); when the observed page counts diverge, dynamic
+    # recompilation re-runs decode-kernel selection with this figure and
+    # can flip the operator choice.
+    committed_pages_per_row: float = 0.0
 
 
 @dataclass
@@ -123,6 +135,7 @@ class ExecutionPlan:
                 f"kv-cache batch axes: {c.cache_batch_axes or '(replicated)'}",
                 f"kv-cache heads/model:{c.cache_heads_over_model}  "
                 f"seq axes:{c.cache_seq_axes or '()'}",
+                f"decode kernel:       {c.decode_kernel}",
             ]
         if self.memory is not None:
             lines.append(self.memory.summary())

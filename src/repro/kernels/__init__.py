@@ -1,12 +1,13 @@
 """repro.kernels — Pallas TPU kernels for the paper's compute hot-spots
-(matmul, im2col conv, attention, SSD scan) + the VMEM-fit dispatch layer
-(DESIGN.md C7). ``ref.py`` holds the pure-jnp oracles."""
+(matmul, im2col conv, attention, paged decode, SSD scan) + the VMEM-fit
+dispatch layer (DESIGN.md C7). ``ref.py`` holds the pure-jnp oracles."""
 
 from repro.kernels import ops, ref
 from repro.kernels.matmul import matmul
 from repro.kernels.conv2d_im2col import conv2d_im2col
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention_xla, paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 __all__ = ["ops", "ref", "matmul", "conv2d_im2col", "flash_attention",
-           "ssd_scan"]
+           "paged_attention_xla", "paged_decode_attention", "ssd_scan"]

@@ -23,6 +23,7 @@ from repro.kernels import ref
 from repro.kernels.conv2d_im2col import conv2d_im2col
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul as matmul_kernel
+from repro.kernels.paged_attention import paged_attention_xla, paged_decode_attention
 from repro.kernels.ssd_scan import ssd_scan
 
 # "auto": pallas iff running on TPU; "pallas": force (interpret on CPU);
@@ -87,6 +88,23 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
         )
     return ref.attention_ref(q, k, v, causal=causal, window=window,
                              q_offset=q_offset)
+
+
+def paged_attention(q, k_cache, v_cache, tables, pos, *, page: int, sc: int):
+    """Fused paged-decode attention; page tables resolved inside the op.
+
+    Pallas path per-block working set: one K and one V physical page, the
+    row's (g, D) query group, and the f32 accumulator scratch.
+    """
+    d = q.shape[-1]
+    g = q.shape[2] // k_cache.shape[1]
+    dt = q.dtype.itemsize
+    if _use_pallas() and _fits_vmem(2 * page * d * dt, g * d * dt,
+                                    g * (d + 2) * 4):
+        return paged_decode_attention(q, k_cache, v_cache, tables, pos,
+                                      page=page, sc=sc, interpret=_interpret())
+    return paged_attention_xla(q, k_cache, v_cache, tables, pos,
+                               page=page, sc=sc)
 
 
 def ssd(x, dt, a, b_mat, c_mat, d, *, chunk: int = 64):

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+NEG_INF = -1e30
+
 
 # ---------------------------------------------------------------------------
 # matmul
@@ -70,6 +72,68 @@ def attention_ref(
     p = jnp.where(row_has_any, p, 0.0)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
     return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (page-table indirection + decode validity mask)
+# ---------------------------------------------------------------------------
+
+def phys_slots(tables: jnp.ndarray, sc: int, page: int) -> jnp.ndarray:
+    """Physical slot index for every logical slot 0..sc-1 of every row.
+
+    tables: (B, n_pages) int32 page table -> (B, sc) int32 flat-stack slots.
+    Mirrors ``models/attention.py::paged_slots`` over a dense slot range;
+    kept here so kernels stay import-free of the model layer.
+    """
+    b, n_pages = tables.shape
+    i = jnp.arange(sc, dtype=jnp.int32)
+    lp = jnp.clip(i // page, 0, n_pages - 1)
+    entry = jnp.take_along_axis(tables, jnp.broadcast_to(lp, (b, sc)), axis=1)
+    return entry * page + i % page
+
+
+def paged_decode_ref(
+    q: jnp.ndarray,        # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,  # (n_slots, Hkv, D) flat slot stack
+    v_cache: jnp.ndarray,  # (n_slots, Hkv, D)
+    tables: jnp.ndarray,   # (B, n_pages) int32
+    pos: jnp.ndarray,      # (B,) int32
+    *,
+    page: int,
+    sc: int,
+    window: int = 0,       # >0: rotating per-row cache of modulus sc
+) -> jnp.ndarray:
+    """Semantic ground truth for the paged decode kernel.
+
+    Deliberately the *literal* composition the serving path used before the
+    fused kernel: gather every logical slot, expand GQA heads with repeat,
+    and apply ``decode_attention``'s validity rule verbatim — including the
+    rotating-window arithmetic, which the kernel replaces with the reduced
+    ``i < min(pos + 1, sc)`` mask. Tests comparing the two prove that
+    reduction.
+    """
+    bsz, _, hq, d = q.shape
+    hkv = k_cache.shape[1]
+    g = hq // hkv
+    n_slots = k_cache.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (bsz,))[:, None]
+
+    i = jnp.arange(sc, dtype=jnp.int32)[None, :]               # (1, sc)
+    if window > 0:
+        p_i = posb - jnp.mod(posb - i, sc)
+        valid = (p_i >= 0) & (p_i <= posb)
+    else:
+        valid = i <= posb
+    phys = jnp.minimum(phys_slots(tables, sc, page), n_slots - 1)
+
+    ke = jnp.repeat(k_cache[phys], g, axis=2)                  # (B, sc, Hq, D)
+    ve = jnp.repeat(v_cache[phys], g, axis=2)
+    qf = q.astype(jnp.float32)[:, 0] * (d ** -0.5)             # (B, Hq, D)
+    s = jnp.einsum("bhd,bkhd->bhk", qf, ke.astype(jnp.float32))
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, ve.astype(jnp.float32))
+    return o[:, None].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -233,6 +233,13 @@ def main():
                          "page the sequence dimension and rows commit only "
                          "the pages their span needs (vLLM-style); 0 "
                          "restores row-granular bucket-shaped leases")
+    ap.add_argument("--decode-kernel", default="auto", dest="decode_kernel",
+                    choices=("auto", "paged", "gather", "ref"),
+                    help="physical decode-attention operator for paged "
+                         "buckets: auto = planner picks per bucket from the "
+                         "analytic cost terms; paged = fused Pallas kernel "
+                         "(page tables resolved in-kernel); gather = jnp "
+                         "gather + dense decode attention; ref = jnp oracle")
     ap.add_argument("--recompile-margin", type=float, default=0.25,
                     help="dynamic-recompilation watermark margin")
     ap.add_argument("--seed", type=int, default=0,

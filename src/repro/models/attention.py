@@ -14,7 +14,7 @@ plus the decode path (one query against a — possibly rotating — cache).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -249,14 +249,33 @@ def paged_gather_kv(
     tables: jnp.ndarray,   # (B, max_pages) int32 page table per row
     page: int,
     sc: int,               # logical cache slots per row
+    pos: Optional[jnp.ndarray] = None,  # per-row decode position
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Gather each row's logical cache view ``(B, sc, Hkv, D)`` out of the
-    shared slot stack. Slots on unallocated pages read clamped garbage —
-    the decode validity mask (slots <= pos) never exposes them."""
+    shared slot stack.
+
+    With ``pos``, slots beyond each row's committed extent
+    (``min(pos + 1, sc)`` — identical for dense and rotating rows, see
+    kernels/paged_attention.py) are masked: their gather index is pinned to
+    slot 0 and the gathered values zeroed, so uncommitted bucket slots are
+    neither wandered through (sentinel table entries point at clamped
+    arbitrary arena slots) nor carried as garbage into the attention op.
+    The decode validity mask downstream already hides their scores; the
+    masking here makes the memory access pattern and the gathered values
+    deterministic. Without ``pos`` (legacy callers) slots on unallocated
+    pages read clamped garbage, still hidden by the validity mask."""
+    b = tables.shape[0]
     i = jnp.arange(sc, dtype=jnp.int32)
-    phys = paged_slots(tables, jnp.broadcast_to(i, (tables.shape[0], sc)),
-                       page)
+    phys = paged_slots(tables, jnp.broadcast_to(i, (b, sc)), page)
     phys = jnp.minimum(phys, k_cache.shape[0] - 1)
+    if pos is not None:
+        posb = jnp.broadcast_to(
+            jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (b,))
+        committed = i[None, :] < jnp.minimum(posb + 1, sc)[:, None]  # (B, sc)
+        phys = jnp.where(committed, phys, 0)
+        ke, ve = k_cache[phys], v_cache[phys]
+        keep = committed[..., None, None]
+        return jnp.where(keep, ke, 0), jnp.where(keep, ve, 0)
     return k_cache[phys], v_cache[phys]
 
 

@@ -20,6 +20,7 @@ from jax import lax
 
 from repro.config import ModelConfig
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.models import attention as ATT
 from repro.models.common import (NULL_CTX, ShardCtx, causal_conv1d, rms_norm,
                                  rope, swiglu)
@@ -176,6 +177,7 @@ def attn_block_decode(
     *, window: int = 0, ctx: ShardCtx = NULL_CTX,
     enc_out_kv: Optional[Tuple] = None,
     tables: Optional[jnp.ndarray] = None, page: int = 0, sc: int = 0,
+    decode_kernel: str = "gather",
 ) -> Tuple[jnp.ndarray, Dict]:
     """x: (B, 1, D). cache: {"k": (B, Sc, Kv, Dh), "v": ...} (kv-head form;
     expansion to full heads happens at the attention einsum). ``pos`` is a
@@ -185,22 +187,38 @@ def attn_block_decode(
     With ``tables``/``page``/``sc`` the cache is block-granular paged:
     k/v are flat ``(n_slots, Kv, Dh)`` slot stacks shared by all rows, and
     the write/read go through each row's page table (physical slot =
-    ``table[i // page] * page + i % page``)."""
+    ``table[i // page] * page + i % page``). ``decode_kernel`` is the
+    plan-chosen physical operator for the paged read side: "paged" fuses
+    the table indirection into the attention op (kernels/paged_attention),
+    "gather" materializes the gathered view, "ref" runs the jnp oracle."""
     h = rms_norm(x, p["ln1"])
     rope_pos = pos[None] if pos.ndim == 0 else pos[:, None]
     q, k, v, _ = _qkv(cfg, p, h, rope_pos, ctx=ctx, expand=False)
     if tables is not None:
         kc, vc = ATT.paged_cache_write(cache["k"], cache["v"], k, v, pos,
                                        tables, page, sc, window=window)
-        ke, ve = ATT.paged_gather_kv(kc, vc, tables, page, sc)
+        if decode_kernel == "paged":
+            # committed-slot mask == decode validity mask for both dense
+            # and rotating rows (see kernels/paged_attention.py), so the
+            # fused op needs pos and sc but not the window
+            o = kops.paged_attention(q, kc, vc, tables, pos, page=page, sc=sc)
+        elif decode_kernel == "ref":
+            o = kref.paged_decode_ref(q, kc, vc, tables, pos, page=page,
+                                      sc=sc, window=window)
+        else:
+            ke, ve = ATT.paged_gather_kv(kc, vc, tables, page, sc, pos=pos)
+            if cfg.q_per_kv > 1:
+                ke = jnp.repeat(ke, cfg.q_per_kv, axis=2)
+                ve = jnp.repeat(ve, cfg.q_per_kv, axis=2)
+            o = ATT.decode_attention(q, ke, ve, pos, window=window)
     else:
         kc, vc = ATT.cache_write(cache["k"], cache["v"], k, v, pos,
                                  window=window)
         ke, ve = kc, vc
-    if cfg.q_per_kv > 1:
-        ke = jnp.repeat(ke, cfg.q_per_kv, axis=2)
-        ve = jnp.repeat(ve, cfg.q_per_kv, axis=2)
-    o = ATT.decode_attention(q, ke, ve, pos, window=window)
+        if cfg.q_per_kv > 1:
+            ke = jnp.repeat(ke, cfg.q_per_kv, axis=2)
+            ve = jnp.repeat(ve, cfg.q_per_kv, axis=2)
+        o = ATT.decode_attention(q, ke, ve, pos, window=window)
     x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     cache = dict(cache, k=kc, v=vc)
     if enc_out_kv is not None:

@@ -320,7 +320,7 @@ class Model:
                     pos: jnp.ndarray, ctx: ShardCtx = NULL_CTX,
                     window_override: Optional[int] = None,
                     tables: Optional[jnp.ndarray] = None, page: int = 0,
-                    seq_len: int = 0):
+                    seq_len: int = 0, decode_kernel: str = "gather"):
         """tokens: (B, 1); pos: scalar int32 *or* a (B,) per-row position
         vector — rows of one batch may sit at different generation depths
         (the row-addressable cache-pool decode shape). Returns
@@ -332,7 +332,9 @@ class Model:
         ``cache`` are flat per-arena slot stacks (``paged_cache_entries``)
         addressed through the (B, max_pages) page table; ``seq_len`` is
         then the logical context bucket the arena was sized for (the flat
-        layout no longer carries it)."""
+        layout no longer carries it). ``decode_kernel`` is the plan-chosen
+        physical operator for the paged read side (paged | gather | ref,
+        see ``blocks.attn_block_decode``); ignored on the dense path."""
         cfg = self.cfg
         pos = jnp.asarray(pos, jnp.int32)
         x = self._embed(params, tokens)
@@ -346,23 +348,27 @@ class Model:
 
         if cfg.family == "hybrid":
             x, cache = self._hybrid_decode(params, x, cache, pos, window, ctx,
-                                           tables=tables, page=page, sc=sc)
+                                           tables=tables, page=page, sc=sc,
+                                           decode_kernel=decode_kernel)
         elif cfg.family == "ssm":
             x, cache = self._scan_decode(params, x, cache, pos, 0, ctx,
                                          prefix="l.", kind="s")
         elif cfg.is_encdec:
             x, cache = self._scan_decode(params, x, cache, pos, window, ctx,
                                          prefix="d.", kind="a", cross=True,
-                                         tables=tables, page=page, sc=sc)
+                                         tables=tables, page=page, sc=sc,
+                                         decode_kernel=decode_kernel)
         else:
             x, cache = self._scan_decode(params, x, cache, pos, window, ctx,
                                          prefix="l.", kind="a",
-                                         tables=tables, page=page, sc=sc)
+                                         tables=tables, page=page, sc=sc,
+                                         decode_kernel=decode_kernel)
         x = rms_norm(x, params["final_ln"])
         return self._logits(params, x), cache
 
     def _scan_decode(self, params, x, cache, pos, window, ctx, *, prefix,
-                     kind, cross=False, tables=None, page=0, sc=0):
+                     kind, cross=False, tables=None, page=0, sc=0,
+                     decode_kernel="gather"):
         cfg = self.cfg
         stacked = _subtree(params, prefix)
         lcache = _subtree({k: v for k, v in cache.items()
@@ -375,7 +381,8 @@ class Model:
                 h, lc2 = B.attn_block_decode(cfg, lp, carry, lc, pos,
                                              window=window, ctx=ctx,
                                              enc_out_kv=(xk, xv),
-                                             tables=tables, page=page, sc=sc)
+                                             tables=tables, page=page, sc=sc,
+                                             decode_kernel=decode_kernel)
             elif kind == "s":
                 lp, lc = xs
                 h, lc2 = B.ssd_block_decode(cfg, lp, carry, lc, pos, ctx=ctx)
@@ -383,7 +390,8 @@ class Model:
                 lp, lc = xs
                 h, lc2 = B.attn_block_decode(cfg, lp, carry, lc, pos,
                                              window=window, ctx=ctx,
-                                             tables=tables, page=page, sc=sc)
+                                             tables=tables, page=page, sc=sc,
+                                             decode_kernel=decode_kernel)
             return h, lc2
 
         xs = (stacked, lcache, *xkv) if cross else (stacked, lcache)
@@ -394,7 +402,7 @@ class Model:
         return x, out
 
     def _hybrid_decode(self, params, x, cache, pos, window, ctx,
-                       tables=None, page=0, sc=0):
+                       tables=None, page=0, sc=0, decode_kernel="gather"):
         cfg = self.cfg
         pat = cfg.layer_pattern()
         rp, ap = _subtree(params, "r."), _subtree(params, "a.")
@@ -416,7 +424,8 @@ class Model:
                 lc = {k: v[ai] for k, v in ac.items()}
                 x, lc2 = B.attn_block_decode(cfg, lp, x, lc, pos,
                                              window=cfg.window_size, ctx=ctx,
-                                             tables=tables, page=page, sc=sc)
+                                             tables=tables, page=page, sc=sc,
+                                             decode_kernel=decode_kernel)
                 for k, v in lc2.items():
                     new_ac[k] = new_ac[k].at[ai].set(v)
                 ai += 1

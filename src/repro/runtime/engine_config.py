@@ -89,6 +89,10 @@ class EngineConfig:
     pool_max_arenas: int = 0
     pool_max_bytes: float = 0.0
     page_size: int = 64
+    # physical decode-attention operator for paged buckets: "auto" lets the
+    # plan compiler choose per bucket from the analytic cost terms (the
+    # SystemML move); the rest force one operator on every decode plan
+    decode_kernel: str = "auto"       # "auto" | "paged" | "gather" | "ref"
 
     # -- batching / lifecycle (ServingEngine) ------------------------------
     max_group_batch: int = 8
@@ -126,6 +130,9 @@ class EngineConfig:
             raise ValueError("recompile_margin must be >= 0")
         if self.page_size < 0:
             raise ValueError("page_size must be >= 0 (0 = row-granular)")
+        if self.decode_kernel not in ("auto", "paged", "gather", "ref"):
+            raise ValueError(f"decode_kernel must be auto|paged|gather|ref, "
+                             f"got {self.decode_kernel!r}")
         if self.pool_arenas < 1:
             raise ValueError("pool_arenas must be >= 1")
         if self.pool_max_arenas < 0 or self.pool_max_bytes < 0:

@@ -45,8 +45,12 @@ def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig,
     fifth argument — the (B, max_pages) page-table array — and the cache's
     attention K/V are flat per-arena slot stacks (``paged_cache_entries``).
     ``seq_len`` is the bucket context the arena is sized for (the flat
-    layout no longer carries it)."""
+    layout no longer carries it). The physical decode-attention operator
+    (paged Pallas kernel / jnp gather / ref oracle) is read off the plan:
+    the compiler chose it per bucket, so the jitted step bakes it in."""
     ctx = ShardCtx(plan, mesh_cfg)
+    kernel = plan.decode_kernel if plan.decode_kernel in ("paged", "ref") \
+        else "gather"
 
     if page:
         # tables defaults to None for families with no paged entries
@@ -54,7 +58,7 @@ def make_decode_step(model, plan: PlanConfig, mesh_cfg: MeshConfig,
         def decode_step(params, cache, tokens, pos, tables=None):
             return model.decode_step(params, cache, tokens, pos, ctx,
                                      tables=tables, page=page,
-                                     seq_len=seq_len)
+                                     seq_len=seq_len, decode_kernel=kernel)
     else:
         def decode_step(params, cache, tokens, pos):
             return model.decode_step(params, cache, tokens, pos, ctx)
@@ -208,7 +212,8 @@ class PlanServer:
         # bytes are checked against them at observe() time
         self.pool_arenas = max(1, c.pool_arenas)
         self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas,
-                                     cache_page_size=self.page_size)
+                                     cache_page_size=self.page_size,
+                                     decode_kernel=c.decode_kernel)
         self.pool = KVCachePool(self.model, max_arenas=c.pool_max_arenas,
                                 max_bytes=c.pool_max_bytes,
                                 page_size=self.page_size)

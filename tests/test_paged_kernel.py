@@ -1,0 +1,241 @@
+"""Paged-attention decode kernel (PR 8): 3-way logits equivalence of the
+fused kernel vs the jnp gather path vs the ref oracle — kernel-level (flat
+slot stacks, shuffled tables, sentinel pages, rotating writes) and
+model-level per family (page-boundary prompts, prompts longer than the
+window, rows at mixed decode depths) — plus planner-side kernel selection:
+deterministic, cost-backed, recorded in ``ExecutionPlan.explain()``, forced
+by ``EngineConfig.decode_kernel``, and re-run with observed page counts on
+dynamic recompilation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SINGLE_DEVICE_MESH, InputShape
+from repro.configs import get_config
+from repro.core.planner import LONG_CONTEXT_THRESHOLD, PlanCompiler
+from repro.core.strategies import RuntimeStats
+from repro.kernels import ops
+from repro.kernels.paged_attention import paged_attention_xla, paged_decode_attention
+from repro.kernels.ref import paged_decode_ref
+from repro.models import attention as ATT
+from repro.models.model import build_model
+from repro.runtime.engine_config import EngineConfig
+from repro.runtime.kv_cache import KVCachePool
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("yi-6b-smoke")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: pallas (interpret) == xla form == oracle
+# ---------------------------------------------------------------------------
+
+
+def _flat_case(b=3, hq=4, hkv=2, d=32, page=4, sc=16, seed=0, sentinel=True):
+    rng = np.random.default_rng(seed)
+    n_pages = -(-sc // page)
+    n_phys = b * n_pages
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(n_phys * page, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n_phys * page, hkv, d)), jnp.float32)
+    tables = rng.permutation(n_phys).reshape(b, n_pages).astype(np.int32)
+    if sentinel:
+        tables[-1, -1] = n_phys  # unallocated page on the last row
+    return q, k, v, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("pos", [[15, 5, 9], [0, 0, 0], [11, 11, 11]])
+def test_paged_kernel_three_way_equivalence(pos):
+    """Mixed decode depths, shuffled tables, one sentinel page: the Pallas
+    kernel (interpret), the XLA form, and the literal-mask oracle agree."""
+    q, k, v, tables = _flat_case()
+    posv = jnp.asarray(pos, jnp.int32)
+    o_ref = paged_decode_ref(q, k, v, tables, posv, page=4, sc=16)
+    o_xla = paged_attention_xla(q, k, v, tables, posv, page=4, sc=16)
+    o_pl = paged_decode_attention(q, k, v, tables, posv, page=4, sc=16,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_kernel_rotating_mask_reduction():
+    """Rows decoded past a rotating window: the oracle applies the literal
+    ``pos - mod(pos - i, sc)`` validity rule, the kernel the reduced
+    committed-slot mask — proving the reduction they must share. Cache
+    contents are written through the real rotating paged write path."""
+    b, hkv, d, page, sc = 2, 2, 32, 4, 8  # sc == window: rotating modulus
+    q, k0, v0, tables = _flat_case(b=b, hq=4, hkv=hkv, d=d, page=page, sc=sc,
+                                   sentinel=False)
+    kc, vc = k0, v0
+    rng = np.random.default_rng(3)
+    for p in range(13):  # decode depth wraps the window
+        posv = jnp.full((b,), p, jnp.int32)
+        kn = jnp.asarray(rng.normal(size=(b, 1, hkv, d)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(b, 1, hkv, d)), jnp.float32)
+        kc, vc = ATT.paged_cache_write(kc, vc, kn, vn, posv, tables, page, sc,
+                                       window=sc)
+    posv = jnp.full((b,), 12, jnp.int32)
+    o_ref = paged_decode_ref(q, kc, vc, tables, posv, page=page, sc=sc,
+                             window=sc)
+    o_pl = paged_decode_attention(q, kc, vc, tables, posv, page=page, sc=sc,
+                                  interpret=True)
+    o_xla = paged_attention_xla(q, kc, vc, tables, posv, page=page, sc=sc)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_xla), np.asarray(o_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_gather_kv_masks_uncommitted_slots():
+    """Satellite fix: with ``pos``, the gather pins uncommitted slots to
+    slot 0 and zeroes their values instead of wandering through clamped
+    sentinel garbage — and committed slots are untouched."""
+    _, k, v, tables = _flat_case(sentinel=True)
+    posv = jnp.asarray([15, 5, 9], jnp.int32)
+    ke, ve = ATT.paged_gather_kv(k, v, tables, 4, 16, pos=posv)
+    ke_legacy, _ = ATT.paged_gather_kv(k, v, tables, 4, 16)
+    for r, p in enumerate([15, 5, 9]):
+        committed = min(p + 1, 16)
+        np.testing.assert_array_equal(np.asarray(ke[r, :committed]),
+                                      np.asarray(ke_legacy[r, :committed]))
+        assert np.all(np.asarray(ke[r, committed:]) == 0.0)
+        assert np.all(np.asarray(ve[r, committed:]) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# model-level: per-family decode_kernel equivalence through real arenas
+# ---------------------------------------------------------------------------
+
+
+def _kernel_equiv(cfg, lengths, seq, page, steps=3):
+    """Decode the same handoff under all three physical operators and
+    require matching logits at every step (mixed depths come free from the
+    per-row prompt lengths)."""
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(KEY)
+    b = len(lengths)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, max(lengths)), 0,
+                              cfg.vocab_size)
+    lengths_a = jnp.asarray(lengths, jnp.int32)
+    logits, dense = model.prefill(params, toks, lengths=lengths_a,
+                                  cache_len=seq)
+    pool = KVCachePool(model, page_size=page)
+    arena = pool.acquire(b, seq)
+    rows = pool.alloc_rows(arena, b)
+    for r, ln in zip(rows, lengths):
+        pool.admit_row(arena, r, prompt=ln, span=ln + steps + 1)
+    pool.write_rows(arena, rows, dense)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    pos = lengths_a
+    caches = {k: arena.cache for k in ("paged", "gather", "ref")}
+    for step in range(steps):
+        for r, p in zip(rows, np.asarray(pos)):
+            pool.ensure_decode_slots(arena, [r], int(p))
+        out = {}
+        for kern in ("gather", "paged", "ref"):
+            out[kern], caches[kern] = model.decode_step(
+                params, caches[kern], tok, pos, tables=arena.tables,
+                page=page, seq_len=seq, decode_kernel=kern)
+        for kern in ("paged", "ref"):
+            np.testing.assert_allclose(
+                np.asarray(out[kern]), np.asarray(out["gather"]),
+                rtol=1e-5, atol=1e-5, err_msg=f"{kern} step {step}")
+        tok = jnp.argmax(out["gather"][:, -1:], axis=-1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_kernel_equiv_attention_family_page_boundary():
+    # prompt of exactly page size + mixed depths across rows
+    _kernel_equiv(CFG, [16, 32, 7], seq=64, page=16)
+
+
+def test_kernel_equiv_hybrid_family_prompt_longer_than_window():
+    cfg = get_config("recurrentgemma-2b-smoke").replace(block_pattern="ra")
+    # window_size=32: prompts 45/38 land pre-rotated across pages
+    _kernel_equiv(cfg, [45, 38], seq=64, page=16)
+
+
+def test_kernel_equiv_hybrid_rotating_wrap():
+    cfg = get_config("recurrentgemma-2b-smoke").replace(
+        block_pattern="ra", window_size=8)
+    _kernel_equiv(cfg, [5, 3], seq=32, page=4, steps=10)
+
+
+def test_paged_kernel_forced_pallas_through_model():
+    """ops.BACKEND='pallas' routes the paged operator through the Pallas
+    kernel in interpret mode — full model decode still matches gather."""
+    prev = ops.BACKEND
+    ops.BACKEND = "pallas"
+    try:
+        _kernel_equiv(CFG, [12, 9], seq=32, page=8, steps=2)
+    finally:
+        ops.BACKEND = prev
+
+
+# ---------------------------------------------------------------------------
+# planner: selection is deterministic, recorded, forcible, flippable
+# ---------------------------------------------------------------------------
+
+
+def _decode_shape(batch, seq):
+    return InputShape(name="d", seq_len=seq, global_batch=batch, kind="decode")
+
+
+def test_planner_selects_paged_and_records_choice():
+    pc = PlanCompiler(cache_pool_arenas=4, cache_page_size=64)
+    plans = [pc.compile(CFG, _decode_shape(4, 128), SINGLE_DEVICE_MESH,
+                        dtype="float32") for _ in range(2)]
+    assert plans[0].config.decode_kernel == plans[1].config.decode_kernel
+    assert plans[0].config.decode_kernel == "paged"
+    assert "decode kernel:       paged" in plans[0].explain()
+
+
+def test_planner_selects_paged_on_long_context_bucket():
+    pc = PlanCompiler(cache_pool_arenas=4, cache_page_size=64)
+    plan = pc.compile(get_config("yi-6b"),
+                      _decode_shape(8, LONG_CONTEXT_THRESHOLD + 1),
+                      SINGLE_DEVICE_MESH)
+    assert plan.config.decode_kernel == "paged"
+
+
+def test_planner_forced_kernel_and_attention_free_family():
+    forced = PlanCompiler(cache_pool_arenas=4, cache_page_size=64,
+                          decode_kernel="gather")
+    plan = forced.compile(CFG, _decode_shape(4, 128), SINGLE_DEVICE_MESH)
+    assert plan.config.decode_kernel == "gather"
+    # attention-free family: no decode-attention operator, even when forced
+    plan = forced.compile(get_config("mamba2-1.3b-smoke"),
+                          _decode_shape(4, 128), SINGLE_DEVICE_MESH)
+    assert plan.config.decode_kernel == "none"
+    with pytest.raises(ValueError):
+        PlanCompiler(decode_kernel="fused")
+
+
+def test_planner_unpaged_compiler_keeps_gather():
+    plan = PlanCompiler().compile(CFG, _decode_shape(4, 128),
+                                  SINGLE_DEVICE_MESH)
+    assert plan.config.decode_kernel == "gather"  # dense (non-paged) serving
+
+
+def test_recompile_reruns_kernel_selection_with_observed_pages():
+    pc = PlanCompiler(cache_pool_arenas=4, cache_page_size=64)
+    prior = pc.compile(CFG, _decode_shape(4, 128), SINGLE_DEVICE_MESH,
+                       dtype="float32")
+    stats = RuntimeStats(shape=_decode_shape(4, 256),
+                         committed_pages_per_row=1.0)
+    plan = pc.recompile(prior, stats)
+    # observed commitment only cheapens the fused kernel: choice holds and
+    # the recompiled plan still records it
+    assert plan.config.decode_kernel == "paged"
+    assert "decode kernel:       paged" in plan.explain()
+
+
+def test_engine_config_decode_kernel_knob():
+    assert EngineConfig().decode_kernel == "auto"
+    assert EngineConfig(decode_kernel="ref").decode_kernel == "ref"
+    with pytest.raises(ValueError):
+        EngineConfig(decode_kernel="flash")
