@@ -44,12 +44,16 @@ from repro.runtime.scheduler import (ContinuousBatchingScheduler,
 from repro.runtime.serve_loop import ServeRequest
 
 try:
-    from benchmarks.bench_meta import scenario_meta
+    from benchmarks.bench_meta import artifact_revision_status, scenario_meta
 except ImportError:  # run as a script from the benchmarks/ directory
-    from bench_meta import scenario_meta
+    from bench_meta import artifact_revision_status, scenario_meta
 
 
 TARGET_OVERHEAD = 1.10
+# the un-donated tick holds input + output copies of the group's arena, so
+# its observed live-bytes watermark on the long-context cell must sit at
+# least this factor above the donating (in-place) run's
+DONATION_TARGET = 1.3
 RESULTS_JSON = "BENCH_engine.json"
 
 
@@ -174,6 +178,42 @@ def _measure(smoke: bool, arch: str):
     return rows, overhead, equal, recompiles, detail
 
 
+def _measure_donation(smoke: bool, arch: str):
+    """Donation A/B on the long-context cell: the same request served by a
+    donating engine (default) and a ``donate=False`` engine. Gates that
+    the un-donated watermark is >= DONATION_TARGET x the donated one (the
+    double-buffer term is real, and donation actually removes it) and that
+    tokens are byte-identical (XLA writing the cache in place must not
+    change a logit)."""
+    batch, context, new_tokens = (4, 360, 6) if smoke else (4, 480, 8)
+    cfg = get_config(arch)
+    out = {}
+    for donate in (True, False):
+        ecfg = EngineConfig(cache_capacity=8, donate=donate)
+        eng = ecfg.build_engine(ecfg.build_server(cfg))
+        eng.submit(ServeRequest(batch, context, new_tokens))
+        recs = eng.drain()
+        assert len(recs) == 1 and eng.idle
+        out[donate] = recs[0]
+    donated_wm = out[True]["watermark_bytes"]
+    plain_wm = out[False]["watermark_bytes"]
+    ratio = plain_wm / donated_wm if donated_wm else 0.0
+    equal = np.array_equal(np.asarray(out[True]["tokens"]),
+                           np.asarray(out[False]["tokens"]))
+    rows = [
+        f"engine_donation,{donated_wm:.0f},"
+        f"undonated_bytes={plain_wm:.0f};ratio_x={ratio:.2f};"
+        f"target>={DONATION_TARGET};tokens_equal={int(equal)}",
+    ]
+    detail = {
+        "batch": batch, "context": context, "new_tokens": new_tokens,
+        "donated_watermark_bytes": donated_wm,
+        "undonated_watermark_bytes": plain_wm,
+        "ratio": ratio, "tokens_equal": equal,
+    }
+    return rows, ratio, equal, detail
+
+
 def run(smoke: bool = False, arch: str = "yi-6b-smoke"):
     """Harness entry point (benchmarks/run.py contract): CSV rows only."""
     return _measure(smoke, arch)[0]
@@ -186,12 +226,33 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="yi-6b-smoke")
     args = ap.parse_args(argv)
 
+    # staleness verdict for the copy we're about to overwrite: a committed
+    # artifact from an older revision must not read as a claim about HEAD
+    prev_status = artifact_revision_status(RESULTS_JSON)
+    if prev_status["status"] == "stale":
+        print(f"# note: existing {RESULTS_JSON} was generated at "
+              f"{prev_status['artifact_git']} (head is "
+              f"{prev_status['head_git']}); regenerating", file=sys.stderr)
+
     print("name,us_per_call,derived")
     rows, overhead, equal, recompiles, detail = _measure(args.smoke,
                                                          args.arch)
+    d_rows, d_ratio, d_equal, d_detail = _measure_donation(args.smoke,
+                                                           args.arch)
+    rows += d_rows
+    detail["donation"] = d_detail
     for row in rows:
         print(row, flush=True)
     ok = True
+    if d_ratio < DONATION_TARGET:
+        print(f"FAIL: donation watermark gain {d_ratio:.2f}x < "
+              f"{DONATION_TARGET}x target (double-buffer term not "
+              f"recovered on the long-context cell)", file=sys.stderr)
+        ok = False
+    if not d_equal:
+        print("FAIL: donated tokens diverged from the --no-donate path",
+              file=sys.stderr)
+        ok = False
     if overhead > TARGET_OVERHEAD:
         print(f"FAIL: streaming overhead {overhead:.2f}x > "
               f"{TARGET_OVERHEAD}x target", file=sys.stderr)
@@ -215,7 +276,12 @@ def main(argv=None) -> int:
                                        "target": TARGET_OVERHEAD},
                 "tokens_equal": {"value": bool(equal), "target": True},
                 "recompiles": {"value": recompiles, "target": 0},
+                "donation_watermark": {"value": d_ratio,
+                                       "target": DONATION_TARGET},
+                "donation_tokens_equal": {"value": bool(d_equal),
+                                          "target": True},
             },
+            "previous_artifact": prev_status,
             "detail": detail,
         }, f, indent=2)
         f.write("\n")

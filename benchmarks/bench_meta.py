@@ -6,13 +6,26 @@ scenario produced it. :func:`scenario_meta` stamps the knobs that change
 the numbers — model arch, replica count, arrival rate — plus the code
 revision (``git describe``) and interpreter, so two artifacts can be
 diffed without guessing which commit or fleet shape they came from.
+
+:func:`artifact_revision_status` answers the follow-up confusion: the
+committed copy of a ``BENCH_*.json`` is a snapshot from whatever revision
+last regenerated it, and readers kept treating it as a statement about
+HEAD. The checker compares the artifact's stamped revision hash against
+the current one (``-dirty`` suffixes ignored: artifacts are regenerated
+from the working tree that becomes the next commit) and returns
+``current`` / ``stale`` / ``unknown``; benches print the verdict for the
+previous on-disk copy before overwriting it, and ``python
+benchmarks/bench_meta.py BENCH_*.json`` audits a checkout's artifacts in
+bulk.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import platform
 import subprocess
+import sys
 from typing import Any, Dict
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -31,6 +44,38 @@ def git_describe() -> str:
     return rev if out.returncode == 0 and rev else "unknown"
 
 
+def _base_rev(described: str) -> str:
+    """The bare revision hash from a ``git describe --always --dirty``
+    string: tags and the -dirty suffix don't identify the snapshot."""
+    rev = described.split("-dirty")[0]
+    # describe with a tag looks like v1.2-3-gabc1234; take the g-hash
+    if "-g" in rev:
+        rev = rev.rsplit("-g", 1)[1]
+    return rev
+
+
+def artifact_revision_status(path: str,
+                             head: str = "") -> Dict[str, Any]:
+    """Whether the on-disk copy of a ``BENCH_*.json`` was generated at the
+    current revision. Returns ``{"path", "artifact_git", "head_git",
+    "status"}`` with status ``current`` (stamped hash matches HEAD,
+    -dirty ignored), ``stale`` (it doesn't: the numbers describe an older
+    tree), or ``unknown`` (no artifact, no stamp, or no git)."""
+    head = head or git_describe()
+    try:
+        with open(path) as f:
+            stamped = json.load(f).get("meta", {}).get("git", "unknown")
+    except (OSError, json.JSONDecodeError):
+        stamped = "unknown"
+    if "unknown" in (stamped, head):
+        status = "unknown"
+    else:
+        status = ("current" if _base_rev(stamped) == _base_rev(head)
+                  else "stale")
+    return {"path": path, "artifact_git": stamped, "head_git": head,
+            "status": status}
+
+
 def scenario_meta(arch: str, *, replicas: int = 1,
                   arrival_rate: float = 0.0, **extra: Any) -> Dict[str, Any]:
     """The dict every bench embeds under ``"meta"`` in its JSON artifact."""
@@ -44,3 +89,24 @@ def scenario_meta(arch: str, *, replicas: int = 1,
     }
     meta.update(extra)
     return meta
+
+
+def main(argv=None) -> int:
+    """Audit artifacts: ``python benchmarks/bench_meta.py BENCH_*.json``
+    prints one status line per file; exits 1 if any is stale."""
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: bench_meta.py BENCH_*.json [...]", file=sys.stderr)
+        return 2
+    head = git_describe()
+    stale = 0
+    for p in paths:
+        st = artifact_revision_status(p, head=head)
+        print(f"{st['status']:8s} {p} (artifact {st['artifact_git']}, "
+              f"head {st['head_git']})")
+        stale += st["status"] == "stale"
+    return 1 if stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,14 @@ now maintains by convention; the linter turns each into a CI gate:
 - ``plan-cache-mutation`` — :class:`~repro.core.plan_cache.PlanCache`
   owns its entry dict; reaching into ``._entries`` bypasses LRU metrics
   and capacity accounting.
+- ``use-after-donation`` — decode steps donate their cache argument
+  (positional 1) to XLA; in tick-path modules a cache reference passed
+  to a ``.step_fn(...)`` call must not be read again before it is
+  rebound or deleted — the donated buffer is deleted on-device, so a
+  later read raises (or silently resurrects a stale copy under
+  disabled checks). Host-side metadata probes (``.is_deleted()``) are
+  the sanctioned exception; waive them with
+  ``# lint: allow-use-after-donation``.
 
 A finding on line N is suppressed by the marker ``# lint: allow-<rule>``
 on that line. Run ``python -m repro.analysis.lint``; exit status is the
@@ -50,6 +58,11 @@ CACHE_BLESSED = ("runtime/kv_cache.py", "models/model.py")
 RID_BLESSED = ("runtime/serve_loop.py",)
 PLAN_CACHE_BLESSED = ("core/plan_cache.py",)
 TICK_PATH = ("models/", "kernels/", "serve_loop")
+# modules that drive donating decode steps: the tick path plus the engine
+# (the engine is deliberately NOT on TICK_PATH — its host-side bookkeeping
+# legitimately calls .item()/int() between ticks — but its tick phase does
+# hand cache references to donating step_fns)
+DONATION_TICK_PATH = TICK_PATH + ("runtime/engine",)
 
 ADMISSION_CALLS = ("alloc_rows", "admit_row", "ensure_slot")
 HOST_SYNC_CALLS = ("asarray", "array")
@@ -63,6 +76,11 @@ def _blessed(path: str, suffixes: Sequence[str]) -> bool:
 def _tick_path(path: str) -> bool:
     norm = path.replace("\\", "/")
     return any(t in norm for t in TICK_PATH)
+
+
+def _donation_tick_path(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return any(t in norm for t in DONATION_TICK_PATH)
 
 
 def _waived(src_lines: Sequence[str], lineno: int, rule: str) -> bool:
@@ -194,6 +212,117 @@ def tracer_host_sync(ctx: _Ctx) -> None:
             ctx.report("tracer-host-sync", node,
                        f"{fn.value.id}.{fn.attr}() materializes to host "
                        f"in the tick path")
+
+
+def _expr_text(node: ast.AST) -> Optional[str]:
+    """Stable source text for a trackable reference (name / attribute /
+    subscript chains). Returns None for expressions with no rebindable
+    identity — a call result (``arena.relinquish()``) or a literal is
+    consumed at the call site and cannot be read again by name."""
+    if isinstance(node, (ast.Name, ast.Attribute, ast.Subscript)):
+        return ast.unparse(node)
+    return None
+
+
+def _donating_calls(stmt: ast.stmt):
+    """``.step_fn(...)`` calls inside one statement whose donated cache
+    argument (positional 1) is a trackable reference."""
+    for node in ast.walk(stmt):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "step_fn"
+                and len(node.args) >= 2):
+            text = _expr_text(node.args[1])
+            if text is not None:
+                yield node, text
+
+
+def _rebinds(stmt: ast.stmt, text: str) -> bool:
+    """Whether ``stmt`` rebinds or deletes the tracked reference — either
+    the exact expression or its root name (rebinding ``cache`` kills the
+    stale path even if ``cache['k']`` was what got donated)."""
+    root = text.split(".")[0].split("[")[0]
+
+    def _hit(t: ast.AST) -> bool:
+        if isinstance(t, ast.Name) and t.id == root:
+            return True
+        if isinstance(t, (ast.Attribute, ast.Subscript)):
+            return ast.unparse(t) == text
+        if isinstance(t, (ast.Tuple, ast.List)):
+            return any(_hit(e) for e in t.elts)
+        return False
+
+    if isinstance(stmt, ast.Assign):
+        return any(_hit(t) for t in stmt.targets)
+    if isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        return _hit(stmt.target)
+    if isinstance(stmt, ast.Delete):
+        return any(_hit(t) for t in stmt.targets)
+    return False
+
+
+def _reads(stmt: ast.stmt, text: str) -> Optional[ast.AST]:
+    """First Load of the tracked reference inside ``stmt``, if any."""
+    for node in ast.walk(stmt):
+        if (isinstance(node, (ast.Name, ast.Attribute, ast.Subscript))
+                and isinstance(getattr(node, "ctx", None), ast.Load)
+                and ast.unparse(node) == text):
+            return node
+    return None
+
+
+@rule
+def use_after_donation(ctx: _Ctx) -> None:
+    """A cache reference handed to a donating ``.step_fn(...)`` call must
+    not be read again before rebinding: XLA deleted the buffer in place.
+    The scan is linear — statements after the donating call in its block,
+    then the statements after each enclosing block (so a donation inside
+    an ``if`` branch is still tracked through the join point)."""
+    if not _donation_tick_path(ctx.path):
+        return
+
+    def scan_block(stmts: List[ast.stmt],
+                   following: List[ast.stmt]) -> None:
+        compound = (ast.If, ast.For, ast.AsyncFor, ast.While, ast.With,
+                    ast.AsyncWith, ast.Try, ast.FunctionDef,
+                    ast.AsyncFunctionDef, ast.ClassDef)
+        for i, stmt in enumerate(stmts):
+            rest = stmts[i + 1:] + following
+            # compound statements defer call detection to the recursion
+            # below (their bodies re-scan with the right continuation);
+            # detecting here too would double-report through ast.walk
+            for call, text in ([] if isinstance(stmt, compound)
+                               else _donating_calls(stmt)):
+                # the call statement's own assignment target rebinding the
+                # reference (cache = entry.step_fn(params, cache, ...)) is
+                # the sanctioned in-place idiom
+                if _rebinds(stmt, text):
+                    continue
+                for later in rest:
+                    hit = _reads(later, text)
+                    if hit is not None:
+                        ctx.report(
+                            "use-after-donation", hit,
+                            f"{text!r} was donated to .step_fn() on line "
+                            f"{call.lineno} and is read again before "
+                            f"rebinding — the buffer is deleted on-device")
+                        break
+                    if _rebinds(later, text):
+                        break
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue   # nested defs get their own walk entry
+            for field in ("body", "orelse", "finalbody"):
+                child = getattr(stmt, field, None)
+                if (isinstance(child, list) and child
+                        and isinstance(child[0], ast.stmt)):
+                    scan_block(child, rest)
+            for handler in getattr(stmt, "handlers", []) or []:
+                scan_block(handler.body, rest)
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scan_block(node.body, [])
 
 
 @rule

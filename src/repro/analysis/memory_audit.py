@@ -1,0 +1,347 @@
+"""Memory-lifetime auditor: certify in-place KV-cache donation per plan.
+
+SystemML's planner trusts compile-time memory statistics; this pass checks
+the statistics' central assumption — that the decode tick updates its KV
+cache *in place* — against what XLA will actually execute. For every
+decode cell of the smoke matrix (arch x dtype x bucket x both forced
+physical operators) it builds the exact jitted step ``PlanServer`` would
+install (same ``make_decode_step``, same ``donate_argnums``), lowers it
+(StableHLO — no device execution), and reads the per-argument
+input-output aliasing metadata (``tf.aliasing_output``) the donation
+produced:
+
+- every *large step input* is classified into a buffer class (``params``,
+  ``attention-slot-stack``, ``recurrent-state``, ``page-table``,
+  ``tokens`` / ``positions``) and marked **aliased-in-place** (XLA writes
+  its output onto the input buffer) or **double-buffered** (a fresh
+  output allocation coexists with the input);
+- a **certified peak-live-bytes** figure is computed from those
+  lifetimes: all inputs plus all outputs must coexist, minus the aliased
+  pairs that share one buffer — the executable cannot do worse at the
+  argument boundary, whatever it does in between;
+- any plan whose KV cache (slot stacks *or* recurrent state) is not
+  donated — or whose donation the lowering did not turn into aliasing —
+  is flagged ``cache-not-donated``.
+
+The report merges into ``ANALYSIS_report.json`` under a ``memory``
+section (next to the plan auditor's cells), so one artifact carries both
+the statistics sandwich and the aliasing certificate.
+
+Run ``python -m repro.analysis.memory_audit --smoke``: audits the matrix,
+runs the planted-violation self-test (a compiler forced to
+``donate_cache=False`` must be flagged; the clean tree must not), and
+exits non-zero on any finding or self-test miss.
+
+Adding a buffer class: see ``analysis/README.md`` — classification is by
+tree path in :func:`classify_leaves`, so a new step input only needs a
+``(predicate, class name)`` entry there and a line in the README table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import Finding
+from repro.analysis.plan_audit import (PAGE_SIZE, POOL_ARENAS, REPORT_PATH,
+                                       SMOKE_ARCHS, SMOKE_BUCKETS,
+                                       SMOKE_DTYPES)
+from repro.config import InputShape, MeshConfig
+from repro.configs import get_config
+from repro.core.planner import PlanCompiler
+from repro.models.model import build_model
+from repro.runtime.serve_loop import make_decode_step
+
+# classes whose buffers MUST alias in place on a donated plan: the cache
+# pytree is the donated argument, and it splits into the paged attention
+# slot stacks and the per-row recurrent/conv/cross state
+DONATED_CLASSES = ("attention-slot-stack", "recurrent-state")
+
+
+# ---------------------------------------------------------------------------
+# lowering introspection
+# ---------------------------------------------------------------------------
+
+
+def lowered_aliases(lowered_text: str) -> Dict[int, int]:
+    """Map flat input index -> aliased output index, parsed from the
+    ``tf.aliasing_output`` attributes donation leaves on the lowered
+    module's ``@main`` signature. Only the entry computation carries
+    them, so the parse is scoped to the ``@main(...)`` argument list."""
+    m = re.search(r"@main\((.*?)\)\s*->", lowered_text, re.S)
+    sig = m.group(1) if m else lowered_text
+    out: Dict[int, int] = {}
+    for idx, attrs in re.findall(
+            r"%arg(\d+): tensor<[^>]*>(?:\s*\{([^}]*)\})?", sig):
+        if attrs:
+            am = re.search(r"tf\.aliasing_output\s*=\s*(\d+)", attrs)
+            if am:
+                out[int(idx)] = int(am.group(1))
+    return out
+
+
+def classify_leaves(model, params, cache, n_extra: int,
+                    has_tables: bool) -> List[Tuple[str, str]]:
+    """(buffer class, leaf label) per flat argument, in the jit's flat
+    order: params leaves, cache leaves (split by
+    ``model.is_paged_cache_key``), then tokens / positions / page table.
+
+    This is the one place a new step input gets its buffer class — add a
+    branch here and the audit record, the donation check, and the peak
+    computation all pick it up."""
+    out: List[Tuple[str, str]] = []
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, _ in leaves_with_paths:
+        out.append(("params", jax.tree_util.keystr(path)))
+    # dict pytrees flatten in sorted-key order; mirror it exactly
+    for key in sorted(cache):
+        cls = ("attention-slot-stack" if model.is_paged_cache_key(key)
+               else "recurrent-state")
+        out.append((cls, key))
+    out.append(("tokens", "tokens"))
+    out.append(("positions", "pos"))
+    if has_tables:
+        out.append(("page-table", "tables"))
+    assert n_extra == len(out), f"leaf map drift: {n_extra} != {len(out)}"
+    return out
+
+
+def _leaf_bytes(leaf) -> int:
+    return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+
+def audit_cell(arch: str, dtype: str, batch: int, seq: int, *,
+               page: int = PAGE_SIZE, pool_arenas: int = POOL_ARENAS,
+               decode_kernel: str = "auto", donate: bool = True
+               ) -> Tuple[Dict[str, Any], List[Finding]]:
+    """Lower one decode cell exactly as the server would jit it and
+    classify every argument's lifetime from the aliasing metadata."""
+    where = f"{arch}/{dtype}/decode/b{batch}s{seq}"
+    if decode_kernel != "auto":
+        where += f"/{decode_kernel}"
+    cfg = get_config(arch)
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    model = build_model(cfg, dtype=dtype)
+    compiler = PlanCompiler(cache_page_size=page,
+                            cache_pool_arenas=pool_arenas,
+                            decode_kernel=decode_kernel,
+                            donate_cache=donate)
+    shape = InputShape(f"req_{batch}x{seq}", seq, batch, "decode")
+    plan = compiler.compile(cfg, shape, mesh_cfg, dtype=dtype)
+
+    params = model.param_specs()
+    ent, n_pages, sc = model.paged_cache_entries(batch, seq, page)
+    cache = {k: jax.ShapeDtypeStruct(s, d) for k, (s, _a, d) in ent.items()}
+    step = make_decode_step(model, plan.config, mesh_cfg, page=page,
+                            seq_len=seq)
+    args: List[Any] = [params, cache,
+                       jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                       jax.ShapeDtypeStruct((batch,), jnp.int32)]
+    if n_pages:
+        args.append(jax.ShapeDtypeStruct((batch, -(-sc // page)), jnp.int32))
+
+    # the server's exact jit, plus keep_unused so flat argument indices in
+    # the lowered module stay 1:1 with the pytree leaves (jit drops unused
+    # args by default, which would scramble the index -> leaf map; dropped
+    # args are never donated, so aliasing classification is unaffected)
+    donate_argnums = (1,) if plan.config.donate_cache else ()
+    jitted = jax.jit(step, donate_argnums=donate_argnums, keep_unused=True)
+    aliases = lowered_aliases(jitted.lower(*args).as_text())
+
+    flat, _ = jax.tree_util.tree_flatten(tuple(args))
+    labels = classify_leaves(model, params, cache, len(flat),
+                             has_tables=bool(n_pages))
+    out_tree = jax.eval_shape(step, *args)
+    out_bytes = sum(_leaf_bytes(x) for x in jax.tree_util.tree_leaves(out_tree))
+
+    classes: Dict[str, Dict[str, Any]] = {}
+    findings: List[Finding] = []
+    in_bytes = 0
+    aliased_bytes = 0
+    for i, leaf in enumerate(flat):
+        cls, label = labels[i]
+        nb = _leaf_bytes(leaf)
+        in_bytes += nb
+        aliased = i in aliases
+        if aliased:
+            aliased_bytes += nb
+        rec = classes.setdefault(cls, {"bytes": 0, "leaves": 0,
+                                       "aliased_leaves": 0,
+                                       "lifetime": "double-buffered"})
+        rec["bytes"] += nb
+        rec["leaves"] += 1
+        rec["aliased_leaves"] += int(aliased)
+        if cls in DONATED_CLASSES and plan.config.donate_cache and not aliased:
+            findings.append(Finding(
+                rule="cache-not-donated", where=where,
+                detail=f"plan records donate_cache=True but cache leaf "
+                       f"{label!r} ({cls}) is not aliased in the lowered "
+                       f"executable — the tick double-buffers it"))
+    for cls, rec in classes.items():
+        rec["lifetime"] = ("aliased-in-place"
+                          if rec["leaves"] == rec["aliased_leaves"]
+                          else "double-buffered")
+    if not plan.config.donate_cache:
+        findings.append(Finding(
+            rule="cache-not-donated", where=where,
+            detail=f"plan compiled without cache donation: every tick "
+                   f"holds a second "
+                   f"{sum(r['bytes'] for c, r in classes.items() if c in DONATED_CLASSES)}B "
+                   f"copy of the arena"))
+
+    # certified peak at the argument boundary: inputs + outputs coexist,
+    # minus the aliased pairs that provably share one buffer
+    peak = in_bytes + out_bytes - aliased_bytes
+    record = {
+        "arch": arch, "dtype": dtype, "batch": batch, "seq": seq,
+        "decode_kernel": plan.config.decode_kernel,
+        "forced_kernel": decode_kernel,
+        "donate_cache": plan.config.donate_cache,
+        "classes": classes,
+        "input_bytes": int(in_bytes),
+        "output_bytes": int(out_bytes),
+        "aliased_bytes": int(aliased_bytes),
+        "certified_peak_bytes": int(peak),
+        "findings": len(findings),
+    }
+    return record, findings
+
+
+# ---------------------------------------------------------------------------
+# matrix + self-test
+# ---------------------------------------------------------------------------
+
+
+def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
+              dtypes: Sequence[str] = SMOKE_DTYPES,
+              buckets: Sequence[Tuple[int, int]] = SMOKE_BUCKETS,
+              page: int = PAGE_SIZE, pool_arenas: int = POOL_ARENAS,
+              donate: bool = True,
+              log=None) -> Tuple[List[Dict[str, Any]], List[Finding]]:
+    cells: List[Dict[str, Any]] = []
+    findings: List[Finding] = []
+    for arch in archs:
+        for dtype in dtypes:
+            for batch, seq in buckets:
+                for dk in ("paged", "gather"):
+                    rec, found = audit_cell(
+                        arch, dtype, batch, seq, page=page,
+                        pool_arenas=pool_arenas, decode_kernel=dk,
+                        donate=donate)
+                    cells.append(rec)
+                    findings.extend(found)
+                    if log:
+                        slot = rec["classes"].get("attention-slot-stack")
+                        state = rec["classes"].get("recurrent-state")
+                        log(f"  {arch}/{dtype}/b{batch}s{seq}[{dk}]: "
+                            f"slot-stack="
+                            f"{slot['lifetime'] if slot else 'n/a'} "
+                            f"state={state['lifetime'] if state else 'n/a'} "
+                            f"peak={rec['certified_peak_bytes']}B "
+                            f"{rec['findings']} finding(s)")
+    return cells, findings
+
+
+def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
+    """The auditor must flag a plan compiled without donation (the planted
+    un-donated fixture) and pass the donated control for both the
+    attention and the pure-recurrent family."""
+    _, clean = audit_cell(arch, "bfloat16", 2, 64, decode_kernel="paged")
+    _, planted = audit_cell(arch, "bfloat16", 2, 64, decode_kernel="paged",
+                            donate=False)
+    _, rec_clean = audit_cell("mamba2-1.3b-smoke", "bfloat16", 2, 64,
+                              decode_kernel="gather")
+    return {
+        "clean_control": not clean,
+        "undonated_cache_flagged": any(f.rule == "cache-not-donated"
+                                       for f in planted),
+        "recurrent_state_aliased": not rec_clean,
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def merge_report(path: str, memory: Dict[str, Any]) -> None:
+    """Land the audit under the ``memory`` section of the (shared)
+    analysis report, preserving whatever the plan auditor wrote."""
+    p = Path(path)
+    report: Dict[str, Any] = {}
+    if p.exists():
+        try:
+            report = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            report = {}
+    report["memory"] = memory
+    p.write_text(json.dumps(report, indent=2))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="certify in-place KV-cache donation from the lowered "
+                    "executable's input-output aliasing")
+    ap.add_argument("--smoke", action="store_true",
+                    help="audit the CI smoke matrix (archs x dtypes x "
+                         "buckets x both forced decode kernels) plus the "
+                         "planted un-donated self-test")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="override the arch list")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="audit the un-donated A/B configuration (every "
+                         "cell is expected to flag)")
+    ap.add_argument("--report", default=REPORT_PATH,
+                    help=f"JSON report path (default {REPORT_PATH})")
+    ap.add_argument("--no-selftest", action="store_true",
+                    help="skip the planted-violation self-test")
+    args = ap.parse_args(argv)
+
+    archs = tuple(args.archs) if args.archs else SMOKE_ARCHS
+    print(f"memory_audit: {len(archs)} arch(s) x {len(SMOKE_DTYPES)} dtypes "
+          f"x {len(SMOKE_BUCKETS)} buckets x 2 kernels")
+    cells, findings = run_audit(archs=archs, donate=not args.no_donate,
+                                log=print)
+
+    st: Dict[str, Any] = {}
+    if not args.no_selftest:
+        st = selftest()
+        for probe, ok in st.items():
+            print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
+
+    memory = {
+        "matrix": {"archs": list(archs), "dtypes": list(SMOKE_DTYPES),
+                   "buckets": [list(b) for b in SMOKE_BUCKETS],
+                   "kernels": ["paged", "gather"]},
+        "cells": cells,
+        "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
+                     for f in findings],
+        "selftest": st,
+    }
+    merge_report(args.report, memory)
+
+    for f in findings:
+        print(f)
+    missed = [k for k, ok in st.items() if not ok]
+    print(f"memory_audit: {len(cells)} cells, {len(findings)} finding(s), "
+          f"report -> {args.report} [memory]")
+    if missed:
+        print(f"memory_audit: self-test MISSED: {', '.join(missed)}")
+    return 1 if findings or missed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

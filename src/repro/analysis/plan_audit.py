@@ -242,27 +242,42 @@ def jaxpr_peak_bytes(jaxpr) -> int:
     return resident + peak
 
 
-def resident_floor_bytes(closed) -> int:
+def resident_floor_bytes(closed, donated_bytes: int = 0) -> int:
     """Certified lower bound on the step's peak: its inputs and outputs
-    must coexist (the steps don't donate), whatever XLA does in between."""
+    must coexist, whatever XLA does in between — minus ``donated_bytes``,
+    the input bytes the plan donates (a donated input aliases its output
+    buffer, so the pair occupies one allocation, not two). The flag comes
+    from the plan, not an assumption: ``repro.analysis.memory_audit``
+    certifies that recorded donation turns into real aliasing in the
+    lowered executable."""
     jx = closed.jaxpr
     total = sum(aval_bytes(v.aval) for v in jx.invars)
     total += sum(aval_bytes(v.aval) for v in jx.outvars
                  if not isinstance(v, Literal))
-    return total
+    return max(0, total - int(donated_bytes))
 
 
 def audit_memory(closed, estimate_total: float, pool_slack_bytes: float,
-                 where: str) -> Tuple[Dict[str, Any], List[Finding]]:
+                 where: str, donated_bytes: int = 0
+                 ) -> Tuple[Dict[str, Any], List[Finding]]:
     """Sandwich the plan's compile-time estimate between the certified
-    floor and the reuse-free ceiling (plus pool slack + workspace)."""
-    floor = resident_floor_bytes(closed)
-    ceiling = (jaxpr_peak_bytes(closed.jaxpr) + pool_slack_bytes)
+    floor and the reuse-free ceiling (plus pool slack + workspace). Both
+    bounds condition on the plan's donation flags (``donated_bytes`` > 0
+    for a ``donate_cache`` decode plan): the jaxpr liveness scan counts
+    the cache's output copy as a fresh allocation, so for a donating step
+    the double-buffer term is subtracted from the ceiling — a donated
+    estimate must fit under the *tighter* bound, and an estimate that
+    still carries the double-buffer term gets flagged instead of
+    silently absorbed."""
+    floor = resident_floor_bytes(closed, donated_bytes)
+    ceiling = (jaxpr_peak_bytes(closed.jaxpr) - int(donated_bytes)
+               + pool_slack_bytes)
     ceiling = int(ceiling * (1.0 + WORKSPACE_FRACTION))
     record = {
         "floor_bytes": int(floor),
         "estimate_bytes": float(estimate_total),
         "ceiling_bytes": int(ceiling),
+        "donated_bytes": int(donated_bytes),
         "covered": bool(ceiling >= estimate_total),
     }
     findings: List[Finding] = []
@@ -396,13 +411,22 @@ def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
     ent = model.cache_entries(batch, seq)
     arena_bytes = sum(int(np.prod(s)) * np.dtype(d).itemsize
                       for s, a, d in ent.values())
+    # a donate_cache plan aliases the cache input onto its output: the
+    # sandwich bounds drop that double-buffer term for exactly the bytes
+    # the plan records as donated
+    donated_bytes = 0
+    if kind == "decode" and plan.config.donate_cache and cache is not None:
+        donated_bytes = sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                            for s in cache.values())
     mem, mem_findings = audit_memory(
         closed, plan.memory.total if plan.memory else 0.0,
-        (pool_arenas - 1) * arena_bytes, where)
+        (pool_arenas - 1) * arena_bytes, where, donated_bytes=donated_bytes)
     findings += mem_findings
     record = {
         "arch": arch, "dtype": dtype, "kind": kind,
         "batch": batch, "seq": seq,
+        "donate_cache": bool(plan.config.donate_cache
+                             if kind == "decode" else False),
         # what the plan actually chose (vs the compiler knob): the matrix
         # asserts the selected physical operator per cell
         "decode_kernel": plan.config.decode_kernel,
@@ -506,12 +530,38 @@ def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
                                   "selftest/long-context")
     honest = check_kernel_choice(cfg, plan.config, shape, PAGE_SIZE,
                                  "selftest/long-context")
+
+    # planted sandwich violation: an estimate that still carries the
+    # double-buffer term must overflow the donated (tighter) ceiling and
+    # get flagged, while the same figure fits the un-donated ceiling —
+    # that asymmetry is what "the bounds condition on donation" means
+    mesh_cfg2 = MeshConfig(shape=(1,), axis_names=("data",))
+    model = build_model(get_config(arch), dtype="bfloat16")
+    probe_plan = PlanCompiler(cache_page_size=PAGE_SIZE,
+                              cache_pool_arenas=POOL_ARENAS,
+                              decode_kernel="paged").compile(
+        get_config(arch), InputShape("probe", 64, 2, "decode"),
+        mesh_cfg2, dtype="bfloat16")
+    closed, _, cache = trace_cell(model, probe_plan, mesh_cfg2,
+                                  "decode", 2, 64)
+    donated = sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                  for s in cache.values())
+    stale_estimate = (jaxpr_peak_bytes(closed.jaxpr)
+                      * (1.0 + WORKSPACE_FRACTION)) - donated // 2
+    _, over = audit_memory(closed, stale_estimate, 0.0,
+                           "selftest/donated-ceiling",
+                           donated_bytes=donated)
+    _, under = audit_memory(closed, stale_estimate, 0.0,
+                            "selftest/donated-ceiling")
     return {
         "clean_control": not clean,
         "fp32_const_flagged": any(f.rule == "dtype-leak" for f in fp32),
         "host_callback_flagged": any(f.rule == "host-sync" for f in cb),
         "paged_kernel_absent_flagged": (
             any(f.rule == "kernel-choice" for f in flagged) and not honest),
+        "donated_ceiling_enforced": (
+            any(f.rule == "memory-uncovered" for f in over)
+            and not any(f.rule == "memory-uncovered" for f in under)),
     }
 
 
@@ -545,14 +595,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for probe, ok in st.items():
             print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
 
-    report = {
+    # the report file is shared with the memory auditor (its aliasing
+    # certificate lives under "memory"): update our sections in place
+    report: Dict[str, Any] = {}
+    if Path(args.report).exists():
+        try:
+            report = json.loads(Path(args.report).read_text())
+        except (OSError, json.JSONDecodeError):
+            report = {}
+    report.update({
         "matrix": {"archs": list(archs), "dtypes": list(SMOKE_DTYPES),
                    "buckets": [list(b) for b in SMOKE_BUCKETS]},
         "cells": cells,
         "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
                      for f in findings],
         "selftest": st,
-    }
+    })
     Path(args.report).write_text(json.dumps(report, indent=2))
 
     for f in findings:

@@ -111,6 +111,7 @@ def estimate_memory(
     cache_pool_arenas: int = 1,
     cache_pages: int = 0,
     cache_page_size: int = 0,
+    donate_cache: bool = True,
 ) -> MemoryEstimate:
     """``dtype`` is the actual compute dtype (params + activations + grads +
     KV cache); compile-time statistics follow it instead of assuming bf16.
@@ -126,7 +127,14 @@ def estimate_memory(
     fixed-size pages (what a paged pool can physically commit — see
     :func:`cache_page_count`) instead of ``arenas x bucket`` dense blobs,
     while per-row recurrent state still scales with the arena count. The
-    paged pool's page-exact live bytes are compared against exactly this."""
+    paged pool's page-exact live bytes are compared against exactly this.
+
+    ``donate_cache=False`` charges the ``kv_double_buffer`` class: a step
+    compiled without buffer donation transiently holds a second full copy
+    of the group's arena (XLA writes the output cache next to the input
+    one). Donated plans — the default — update in place, which
+    ``repro.analysis.memory_audit`` certifies from the executable's
+    input-output aliasing."""
     nb = dtype_bytes(dtype)
     est = MemoryEstimate(budget=hw.hbm_bytes)
     p = model.param_count()
@@ -159,6 +167,13 @@ def estimate_memory(
         else:
             est.per_device["kv_cache"] = (max(1, cache_pool_arenas)
                                           * _cache_bytes(model, shape, plan, mesh, nb))
+        if not donate_cache:
+            # un-donated tick: the step's cache output is a fresh buffer
+            # the size of one full arena (paged output stacks allocate at
+            # capacity regardless of page commitment), live next to the
+            # input copy until the arena re-adopts it
+            est.per_device["kv_double_buffer"] = _cache_bytes(
+                model, shape, plan, mesh, nb)
         est.per_device["activations"] = _decode_activation_bytes(model, shape, dp, mp, nb)
 
     est.per_device["workspace"] = 0.08 * sum(est.per_device.values())

@@ -37,7 +37,7 @@ LONG_CONTEXT_THRESHOLD = 262_144  # beyond this, full attention must window
 class PlanCompiler:
     def __init__(self, hw: HardwareSpec = TPU_V5E, headroom: float = 0.9,
                  cache_pool_arenas: int = 1, cache_page_size: int = 0,
-                 decode_kernel: str = "auto"):
+                 decode_kernel: str = "auto", donate_cache: bool = True):
         self.hw = hw
         self.headroom = headroom
         # decode statistics are sized for a KV-cache pool provisioned for
@@ -54,6 +54,10 @@ class PlanCompiler:
         if decode_kernel not in ("auto", "paged", "gather", "ref"):
             raise ValueError(f"unknown decode_kernel {decode_kernel!r}")
         self.decode_kernel = decode_kernel
+        # decode steps donate their cache argument (in-place KV update);
+        # False is the --no-donate A/B escape hatch, and the statistics
+        # then charge the transient second arena copy honestly
+        self.donate_cache = bool(donate_cache)
 
     def _select_decode_kernel(
         self, model: ModelConfig, shape: InputShape,
@@ -90,6 +94,8 @@ class PlanCompiler:
 
     def _cache_kwargs(self, model: ModelConfig, shape: InputShape) -> dict:
         kw = {"cache_pool_arenas": self.cache_pool_arenas}
+        if shape.kind == "decode":
+            kw["donate_cache"] = self.donate_cache
         if self.cache_page_size and shape.kind == "decode":
             kw["cache_page_size"] = self.cache_page_size
             kw["cache_pages"] = self.cache_pool_arenas * cache_page_count(
@@ -144,7 +150,8 @@ class PlanCompiler:
                 chosen_mem = chosen_mem.scaled(mem_scale)
         if shape.kind == "decode":
             chosen = chosen.replace(
-                decode_kernel=self._select_decode_kernel(model, shape))
+                decode_kernel=self._select_decode_kernel(model, shape),
+                donate_cache=self.donate_cache)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw,
                              page=self.cache_page_size)
         return ExecutionPlan(

@@ -66,6 +66,15 @@ class PlanConfig:
     # kernel resolving page tables in-kernel; "gather" = jnp gather +
     # dense decode attention; "ref" = pure-jnp oracle path.
     decode_kernel: str = "gather"             # paged | gather | ref
+    # Buffer donation for the decode tick: the jitted step donates its
+    # cache argument to XLA (``donate_argnums``), so the KV slot stack /
+    # recurrent state update in place instead of double-buffering. The
+    # memory statistics condition on this flag (the un-donated step
+    # transiently holds a second copy of the group's arena), and
+    # ``repro.analysis.memory_audit`` certifies it against the lowered
+    # executable's input-output aliasing. Prefill plans keep False: the
+    # prompt pass has no cache input to donate.
+    donate_cache: bool = False
     notes: Tuple[str, ...] = ()
 
     def replace(self, **kw) -> "PlanConfig":
@@ -131,11 +140,18 @@ class ExecutionPlan:
             f"attention variant:   {c.attention_variant}",
         ]
         if self.shape.is_decode:
+            # donation per buffer class: the cache pytree (attention slot
+            # stacks + recurrent state) is the only donated step input;
+            # params and page tables are read-shared across groups
+            donated = "donated (in-place)" if c.donate_cache \
+                else "double-buffered"
             lines += [
                 f"kv-cache batch axes: {c.cache_batch_axes or '(replicated)'}",
                 f"kv-cache heads/model:{c.cache_heads_over_model}  "
                 f"seq axes:{c.cache_seq_axes or '()'}",
                 f"decode kernel:       {c.decode_kernel}",
+                f"buffer donation:     kv-cache/recurrent-state {donated}; "
+                f"params, page tables read-only",
             ]
         if self.memory is not None:
             lines.append(self.memory.summary())

@@ -240,6 +240,12 @@ def main():
                          "analytic cost terms; paged = fused Pallas kernel "
                          "(page tables resolved in-kernel); gather = jnp "
                          "gather + dense decode attention; ref = jnp oracle")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable decode-step cache donation (A/B escape "
+                         "hatch): the tick double-buffers the KV cache "
+                         "instead of updating it in place; expect the "
+                         "live-bytes watermark to rise by one arena copy "
+                         "per in-flight group, tokens byte-identical")
     ap.add_argument("--recompile-margin", type=float, default=0.25,
                     help="dynamic-recompilation watermark margin")
     ap.add_argument("--seed", type=int, default=0,

@@ -446,6 +446,14 @@ class _Group:
     pos: Any                          # (batch_bucket,) int32 per-row positions
     steps_done: int = 0
     peak_rows: int = 0                # max *concurrent* leased rows observed
+    # whether the last decode step consumed its relinquished cache input
+    # (buffer donation aliased input onto output); True until observed
+    # otherwise so a zero-step group charges no phantom double-buffer
+    cache_donated: bool = True
+    # peak extra cache-class bytes observed live during un-donated ticks
+    # (input + output arena copies coexisting); sampled at tick time —
+    # by group retire the members' pages are already freed
+    double_buffer_bytes: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -1034,7 +1042,14 @@ class ServingEngine:
             self.active.append(group)
 
     def _phase_tick(self, group: _Group) -> None:
-        """One decode step for the group; emit each live member's token."""
+        """One decode step for the group; emit each live member's token.
+
+        The arena *relinquishes* its cache pytree for the step and
+        *re-adopts* the step's output: with a donating step (the default)
+        the input buffers are consumed in place by XLA, so nothing may
+        read the relinquished reference between the call and the adopt —
+        the ``use-after-donation`` lint rule enforces exactly this shape.
+        """
         srv = self.server
         if srv.pool.paged:
             # grant the page covering each live row's next write position
@@ -1044,12 +1059,25 @@ class ServingEngine:
                 if not m.done:
                     wpos = m.base_pos + (group.steps_done - m.join_step)
                     srv.pool.ensure_decode_slots(group.arena, m.rows, wpos)
-            logits, group.arena.cache = group.entry.step_fn(
-                srv.params, group.arena.cache, group.toks, group.pos,
-                group.arena.tables)
+            tables = group.arena.tables
+            cache_in = group.arena.relinquish()
+            logits, cache_out = group.entry.step_fn(
+                srv.params, cache_in, group.toks, group.pos, tables)
         else:
-            logits, group.arena.cache = group.entry.step_fn(
-                srv.params, group.arena.cache, group.toks, group.pos)
+            cache_in = group.arena.relinquish()
+            logits, cache_out = group.entry.step_fn(
+                srv.params, cache_in, group.toks, group.pos)
+        # whether the step actually consumed its cache input (donation
+        # aliased the buffers): host-side flag check, no device sync —
+        # feeds the observed live-bytes watermark at group retire
+        group.cache_donated = all(  # metadata probe, never touches buffers
+            x.is_deleted() for x in jax.tree.leaves(cache_in)  # lint: allow-use-after-donation
+            if hasattr(x, "is_deleted"))
+        del cache_in
+        group.arena.adopt(cache_out)
+        if not group.cache_donated:
+            group.double_buffer_bytes = max(group.double_buffer_bytes,
+                                            group.arena.live_nbytes())
         group.toks = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         if self.sync_per_tick:
             jax.block_until_ready(group.toks)
@@ -1125,7 +1153,11 @@ class ServingEngine:
         shape = InputShape(
             f"group_{group.peak_rows}x{group.context}",
             group.seq_bucket, group.peak_rows, "decode")
-        stats = srv.observed_stats(group.entry, shape, group.toks)
+        # an un-donated step held input + output copies of the arena at
+        # once: charge the observed watermark the second copy honestly
+        stats = srv.observed_stats(
+            group.entry, shape, group.toks,
+            double_buffer_bytes=group.double_buffer_bytes)
         refreshed, reasons = srv.observe(group.entry.key, stats)
         plan = (refreshed or group.entry).plan
         for m in group.members:

@@ -93,6 +93,11 @@ class EngineConfig:
     # plan compiler choose per bucket from the analytic cost terms (the
     # SystemML move); the rest force one operator on every decode plan
     decode_kernel: str = "auto"       # "auto" | "paged" | "gather" | "ref"
+    # buffer donation for decode steps: the jitted tick donates the cache
+    # pytree to XLA, so KV slot stacks / recurrent state update in place
+    # instead of double-buffering (certified by
+    # ``repro.analysis.memory_audit``); --no-donate is the A/B escape hatch
+    donate: bool = True
 
     # -- batching / lifecycle (ServingEngine) ------------------------------
     max_group_batch: int = 8
@@ -158,6 +163,8 @@ class EngineConfig:
         # flags whose argparse spelling differs from the field name
         if hasattr(args, "no_cache"):
             pick["enable_cache"] = not args.no_cache
+        if hasattr(args, "no_donate"):
+            pick["donate"] = not args.no_donate
         return cls(**{k: v for k, v in pick.items()})
 
     # -- builders (function-local imports break the layering cycle:

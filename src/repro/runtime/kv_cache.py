@@ -220,6 +220,27 @@ class CacheArena:
                 raise ValueError(f"row {r} double-freed")
             self._free.append(r)
 
+    # -- donation handoff --------------------------------------------------
+    def relinquish(self) -> Dict[str, Any]:
+        """Hand the cache pytree to a (possibly donating) decode step: the
+        arena drops its reference so the step argument is the only live
+        handle — a donating jit then consumes the buffers in place, and no
+        stale reference can read them mid-step. The tick must
+        :meth:`adopt` the step's cache output before anything else touches
+        the arena."""
+        if self.cache is None:
+            raise RuntimeError(
+                "arena cache already relinquished and not re-adopted")
+        cache, self.cache = self.cache, None
+        return cache
+
+    def adopt(self, cache: Dict[str, Any]) -> None:
+        """Re-adopt the decode step's cache output as the arena's live
+        pytree (the other half of :meth:`relinquish`)."""
+        if self.cache is not None:
+            raise RuntimeError("arena already holds a live cache pytree")
+        self.cache = cache
+
     # -- paging ------------------------------------------------------------
     @property
     def pages_leased(self) -> int:

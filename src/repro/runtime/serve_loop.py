@@ -213,7 +213,8 @@ class PlanServer:
         self.pool_arenas = max(1, c.pool_arenas)
         self.compiler = PlanCompiler(hw, cache_pool_arenas=self.pool_arenas,
                                      cache_page_size=self.page_size,
-                                     decode_kernel=c.decode_kernel)
+                                     decode_kernel=c.decode_kernel,
+                                     donate_cache=c.donate)
         self.pool = KVCachePool(self.model, max_arenas=c.pool_max_arenas,
                                 max_bytes=c.pool_max_bytes,
                                 page_size=self.page_size)
@@ -233,10 +234,20 @@ class PlanServer:
     # ------------------------------------------------------------------
     def _build_step(self, plan: ExecutionPlan):
         if plan.shape.kind == "prefill":
+            # nothing safe to donate: the prompt pass has no cache input
+            # and params are shared by every plan
             return jax.jit(make_prefill(self.model, plan.config, self.mesh_cfg))
-        return jax.jit(make_decode_step(self.model, plan.config, self.mesh_cfg,
-                                        page=self.page_size,
-                                        seq_len=plan.shape.seq_len))
+        step = make_decode_step(self.model, plan.config, self.mesh_cfg,
+                                page=self.page_size,
+                                seq_len=plan.shape.seq_len)
+        if plan.config.donate_cache:
+            # donate the cache pytree (positional arg 1): XLA aliases each
+            # cache output onto its input buffer, so the slot stacks and
+            # recurrent state update in place instead of double-buffering.
+            # The engine relinquishes the arena's pytree for the step and
+            # re-adopts the output (CacheArena.relinquish/adopt).
+            return jax.jit(step, donate_argnums=(1,))
+        return jax.jit(step)
 
     def _compile_entry(self, key: PlanKey) -> CacheEntry:
         t0 = time.perf_counter()
@@ -301,12 +312,19 @@ class PlanServer:
 
     # ------------------------------------------------------------------
     def observed_stats(self, entry: CacheEntry, shape: InputShape,
-                       toks) -> RuntimeStats:
+                       toks, double_buffer_bytes: float = 0.0
+                       ) -> RuntimeStats:
         """Measured runtime statistics for one executed request: the live-
         bytes watermark per chip (params + the *whole* KV-cache pool +
         in-flight tokens) and the pool's own per-chip bytes. Each tensor
         class only divides across the chips the plan actually shards it
-        over; replicated layouts hold a full copy per chip."""
+        over; replicated layouts hold a full copy per chip.
+
+        ``double_buffer_bytes``: extra cache-class bytes observed live
+        during the tick — the engine passes the group's arena footprint
+        when the step did *not* consume its donated cache input (the
+        un-donated step holds input + output copies simultaneously), so
+        the watermark reflects what the device actually held."""
         cfgp = entry.plan.config
         mesh = self.mesh_cfg
         param_div = 1
@@ -322,7 +340,8 @@ class PlanServer:
             kv_div *= mesh.model_parallelism
         pool_bytes = self.pool.live_bytes()
         watermark = (self._params_bytes / param_div
-                     + (pool_bytes + toks.nbytes) / kv_div)
+                     + (pool_bytes + double_buffer_bytes + toks.nbytes)
+                     / kv_div)
         return RuntimeStats(shape=shape, watermark_bytes=watermark,
                             cache_pool_bytes=pool_bytes / kv_div)
 

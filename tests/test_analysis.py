@@ -290,3 +290,244 @@ def test_serve_launcher_accepts_sanitize_flag():
 
     ns = argparse.Namespace(sanitize=True, dtype="float32")
     assert EngineConfig.from_args(ns).sanitize is True
+
+
+# ---------------------------------------------------------------------------
+# PR 9: use-after-donation lint rule
+# ---------------------------------------------------------------------------
+
+
+_DONATION_BAD = """
+def tick(group, srv):
+    logits, new_cache = group.entry.step_fn(
+        srv.params, group.arena.cache, group.toks, group.pos)
+    stale = group.arena.cache["layer0.k"]
+    group.arena.cache = new_cache
+    return logits, stale
+"""
+
+
+def test_lint_use_after_donation_seeded():
+    """A cache reference read after being passed to a donating step and
+    before rebinding is flagged — but only in tick-path modules."""
+    found = lint_source(_DONATION_BAD, "src/repro/runtime/engine_x.py")
+    assert _rules(found) == {"use-after-donation"}
+    # non-tick modules (analysis tooling, tests) are out of scope
+    assert lint_source(_DONATION_BAD, "src/repro/analysis/fixture.py") == []
+
+
+def test_lint_use_after_donation_clean_idioms():
+    """The sanctioned shapes stay clean: rebind through the call's own
+    assignment, rebind before any read, and untrackable (consumed at the
+    call site) arguments."""
+    rebind = ("def tick(entry, params, cache, toks, pos):\n"
+              "    logits, cache = entry.step_fn(params, cache, toks, pos)\n"
+              "    return logits, cache\n")
+    assert lint_source(rebind, "src/repro/runtime/engine_x.py") == []
+    consumed = ("def tick(group, srv):\n"
+                "    logits, out = group.entry.step_fn(\n"
+                "        srv.params, group.arena.relinquish(), group.toks,\n"
+                "        group.pos)\n"
+                "    group.arena.adopt(out)\n"
+                "    return logits\n")
+    assert lint_source(consumed, "src/repro/runtime/engine_x.py") == []
+    rebound_first = ("def tick(group, srv, fresh):\n"
+                     "    logits, out = group.entry.step_fn(\n"
+                     "        srv.params, group.cache, group.toks, group.pos)\n"
+                     "    group.cache = out\n"
+                     "    return logits, group.cache\n")
+    assert lint_source(rebound_first, "src/repro/runtime/engine_x.py") == []
+
+
+def test_lint_use_after_donation_tracks_through_branch_join():
+    """A donation inside an ``if`` branch is tracked past the join point
+    into the parent block (the engine's paged/dense split)."""
+    src = ("def tick(group, srv, paged):\n"
+           "    if paged:\n"
+           "        logits, out = group.entry.step_fn(\n"
+           "            srv.params, group.cache, group.toks, group.pos,\n"
+           "            group.tables)\n"
+           "    else:\n"
+           "        logits, out = group.entry.step_fn(\n"
+           "            srv.params, group.cache, group.toks, group.pos)\n"
+           "    leak = group.cache\n"
+           "    group.cache = out\n"
+           "    return logits, leak\n")
+    found = lint_source(src, "src/repro/runtime/engine_x.py")
+    assert _rules(found) == {"use-after-donation"}
+    assert len(found) == 2  # both branches' donations reach the read
+
+
+def test_lint_use_after_donation_waiver():
+    """The explicit waiver suppresses the finding (host-side metadata
+    probes like .is_deleted() are the sanctioned exception)."""
+    waived = _DONATION_BAD.replace(
+        'stale = group.arena.cache["layer0.k"]',
+        'stale = group.arena.cache["layer0.k"]'
+        '  # lint: allow-use-after-donation')
+    assert lint_source(waived, "src/repro/runtime/engine_x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# PR 9: donation-conditioned memory sandwich + memory auditor
+# ---------------------------------------------------------------------------
+
+
+def test_plan_audit_donated_ceiling_conditioned():
+    """The reuse-free ceiling conditions on the plan's donation flags: an
+    estimate that still carries the double-buffer term must overflow the
+    donated (tighter) ceiling while fitting the un-donated one."""
+    from repro.analysis.plan_audit import audit_memory
+    import jax
+    import jax.numpy as jnp
+
+    def step(cache, x):
+        return cache + x, cache * 2.0
+
+    cache_spec = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    closed = jax.make_jaxpr(step)(cache_spec, cache_spec)
+    donated = 1024 * 4
+    # an estimate sitting just above the donated ceiling but under the
+    # un-donated one (the two differ by exactly the donated bytes)
+    _, under = audit_memory(closed, 4.0 * donated, 0.0, "t")
+    _, over = audit_memory(closed, 4.0 * donated, 0.0, "t",
+                           donated_bytes=donated)
+    assert not any(f.rule == "memory-uncovered" for f in under)
+    assert any(f.rule == "memory-uncovered" for f in over)
+    # and the floor drops by the donated bytes too
+    rec_d, _ = audit_memory(closed, 4.0 * donated, 0.0, "t",
+                            donated_bytes=donated)
+    rec_u, _ = audit_memory(closed, 4.0 * donated, 0.0, "t")
+    assert rec_u["floor_bytes"] - rec_d["floor_bytes"] == donated
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_memory_audit_certifies_aliasing(arch):
+    """Tentpole acceptance: for each family the lowered decode executable
+    aliases every cache leaf (slot stacks and/or recurrent state) onto
+    its output, and the certified peak credits exactly those bytes."""
+    from repro.analysis.memory_audit import DONATED_CLASSES, audit_cell
+
+    rec, findings = audit_cell(arch, "bfloat16", 1, 64,
+                               decode_kernel="paged")
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert rec["donate_cache"] is True
+    cache_classes = [c for c in rec["classes"] if c in DONATED_CLASSES]
+    assert cache_classes, rec["classes"]
+    for c in cache_classes:
+        assert rec["classes"][c]["lifetime"] == "aliased-in-place", rec
+    cache_bytes = sum(rec["classes"][c]["bytes"] for c in cache_classes)
+    assert rec["aliased_bytes"] == cache_bytes
+    assert (rec["certified_peak_bytes"]
+            == rec["input_bytes"] + rec["output_bytes"] - cache_bytes)
+
+
+def test_memory_audit_flags_undonated_plan():
+    """The planted fixture: a compiler forced to donate_cache=False
+    produces a plan every cell of which is flagged cache-not-donated."""
+    from repro.analysis.memory_audit import audit_cell
+
+    rec, findings = audit_cell("yi-6b-smoke", "bfloat16", 1, 64,
+                               decode_kernel="paged", donate=False)
+    assert rec["donate_cache"] is False
+    assert any(f.rule == "cache-not-donated" for f in findings)
+    # nothing aliases without donation
+    assert rec["aliased_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# PR 9: sanitized serving on donated buffers
+# ---------------------------------------------------------------------------
+
+
+def _run_scenario(arch, donate):
+    """The full engine scenario (submit / stream / EOS / cancel / drain)
+    under sanitize=True, returning records sorted by rid."""
+    cfg = get_config(arch)
+    ecfg = EngineConfig(sanitize=True, cache_capacity=8, donate=donate)
+    eng = ecfg.build_engine(ecfg.build_server(cfg))
+    reqs = [ServeRequest(1, 24, 6),
+            ServeRequest(2, 28, 6),
+            ServeRequest(1, 24, 6, eos_id=0),  # may stop early on EOS
+            ServeRequest(1, 30, 8)]
+    handles = [eng.submit(r) for r in reqs]
+    for ev in eng.events():
+        if (ev.token is not None and ev.rid == handles[3].rid
+                and ev.index >= 1):
+            eng.cancel(handles[3])  # same-tick reclamation of live rows
+    recs = eng.drain()
+    assert eng.idle and not eng.handles
+    assert eng.server.pool.live_bytes() == 0.0
+    return sorted(recs, key=lambda r: r["rid"])
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_sanitized_donation_token_parity(arch):
+    """Donated serving is byte-identical to the double-buffered path under
+    the sanitizer, across the attention / SSD / hybrid families — incl.
+    cancel and EOS reclaiming rows the same tick the step consumed the
+    cache. XLA writing in place must not change a single logit."""
+    import numpy as np
+
+    donated = _run_scenario(arch, donate=True)
+    plain = _run_scenario(arch, donate=False)
+    assert len(donated) == len(plain)
+    # rids are process-global mints — compare positionally (sorted order
+    # is submission order in both runs)
+    for d, p in zip(donated, plain):
+        assert d["finish_reason"] == p["finish_reason"]
+        assert (np.asarray(d["tokens"]).tobytes()
+                == np.asarray(p["tokens"]).tobytes())
+        # the donated run never holds the second arena copy
+        assert d["watermark_bytes"] <= p["watermark_bytes"]
+
+
+def test_bench_meta_artifact_revision_status(tmp_path):
+    """The staleness checker: an artifact stamped with the current
+    revision reads current, a different hash reads stale, a missing or
+    unstamped file reads unknown (never an exception)."""
+    import json
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    try:
+        import bench_meta
+    finally:
+        sys.path.pop(0)
+
+    head = bench_meta.git_describe()
+    current = tmp_path / "BENCH_current.json"
+    current.write_text(json.dumps({"meta": {"git": head}}))
+    stale = tmp_path / "BENCH_stale.json"
+    stale.write_text(json.dumps({"meta": {"git": "deadbee-dirty"}}))
+    unstamped = tmp_path / "BENCH_unstamped.json"
+    unstamped.write_text(json.dumps({"rows": []}))
+
+    assert bench_meta.artifact_revision_status(str(current))["status"] \
+        in ("current", "unknown")  # unknown only outside a git checkout
+    if head != "unknown":
+        assert (bench_meta.artifact_revision_status(str(stale))["status"]
+                == "stale")
+        # -dirty suffixes are ignored: regenerating from the working tree
+        # that becomes the next commit must not read as stale
+        dirty = tmp_path / "BENCH_dirty.json"
+        dirty.write_text(json.dumps(
+            {"meta": {"git": bench_meta._base_rev(head) + "-dirty"}}))
+        assert (bench_meta.artifact_revision_status(str(dirty))["status"]
+                == "current")
+    assert (bench_meta.artifact_revision_status(str(unstamped))["status"]
+            == "unknown")
+    assert (bench_meta.artifact_revision_status(str(tmp_path / "nope.json"))
+            ["status"] == "unknown")
+
+
+def test_serve_launcher_accepts_no_donate_flag():
+    """--no-donate inverts into EngineConfig.donate (A/B escape hatch)."""
+    import argparse
+
+    ns = argparse.Namespace(no_donate=True, dtype="float32")
+    assert EngineConfig.from_args(ns).donate is False
+    ns = argparse.Namespace(no_donate=False, dtype="float32")
+    assert EngineConfig.from_args(ns).donate is True
