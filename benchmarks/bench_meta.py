@@ -16,7 +16,13 @@ from the working tree that becomes the next commit) and returns
 ``current`` / ``stale`` / ``unknown``; benches print the verdict for the
 previous on-disk copy before overwriting it, and ``python
 benchmarks/bench_meta.py BENCH_*.json`` audits a checkout's artifacts in
-bulk.
+bulk (CI runs exactly that in the analysis job and fails on ``stale``).
+
+A stamp of HEAD's *parent* also counts as ``current``: regenerating from
+the dirty working tree stamps ``<rev>-dirty`` where ``<rev>`` is the
+commit the tree was based on, and that tree then *becomes* the next
+commit — so at the new HEAD, the honest stamp for a fresh artifact is
+the parent hash. Anything older is a genuinely stale snapshot.
 """
 
 from __future__ import annotations
@@ -54,14 +60,29 @@ def _base_rev(described: str) -> str:
     return rev
 
 
-def artifact_revision_status(path: str,
-                             head: str = "") -> Dict[str, Any]:
+def _parent_rev() -> str:
+    """Short hash of HEAD's parent, or "" when there is none / no git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD^"],
+            capture_output=True, text=True, timeout=10, cwd=_REPO_ROOT)
+    except (OSError, subprocess.SubprocessError):
+        return ""
+    rev = out.stdout.strip()
+    return rev if out.returncode == 0 else ""
+
+
+def artifact_revision_status(path: str, head: str = "",
+                             parent: str = "") -> Dict[str, Any]:
     """Whether the on-disk copy of a ``BENCH_*.json`` was generated at the
     current revision. Returns ``{"path", "artifact_git", "head_git",
-    "status"}`` with status ``current`` (stamped hash matches HEAD,
-    -dirty ignored), ``stale`` (it doesn't: the numbers describe an older
-    tree), or ``unknown`` (no artifact, no stamp, or no git)."""
+    "status"}`` with status ``current`` (stamped hash matches HEAD or its
+    parent, -dirty ignored — a ``<parent>-dirty`` stamp is the working
+    tree that *became* HEAD), ``stale`` (older than that: the numbers
+    describe a superseded tree), or ``unknown`` (no artifact, no stamp,
+    or no git)."""
     head = head or git_describe()
+    parent = parent or _parent_rev()
     try:
         with open(path) as f:
             stamped = json.load(f).get("meta", {}).get("git", "unknown")
@@ -70,8 +91,9 @@ def artifact_revision_status(path: str,
     if "unknown" in (stamped, head):
         status = "unknown"
     else:
-        status = ("current" if _base_rev(stamped) == _base_rev(head)
-                  else "stale")
+        base = _base_rev(stamped)
+        current = base == _base_rev(head) or (parent and base == parent)
+        status = "current" if current else "stale"
     return {"path": path, "artifact_git": stamped, "head_git": head,
             "status": status}
 
@@ -99,9 +121,10 @@ def main(argv=None) -> int:
         print("usage: bench_meta.py BENCH_*.json [...]", file=sys.stderr)
         return 2
     head = git_describe()
+    parent = _parent_rev()
     stale = 0
     for p in paths:
-        st = artifact_revision_status(p, head=head)
+        st = artifact_revision_status(p, head=head, parent=parent)
         print(f"{st['status']:8s} {p} (artifact {st['artifact_git']}, "
               f"head {st['head_git']})")
         stale += st["status"] == "stale"

@@ -1,0 +1,700 @@
+"""Compute-cost certifier: jaxpr-derived FLOP/traffic bounds that audit
+the planner's cost model and its kernel-selection decisions.
+
+SystemML's compiler picks physical operators from size/cost statistics,
+so the statistics must be *right*: a drifted constant in
+``core/cost.py`` silently flips the paged/gather crossover and nothing
+numerical ever notices. The memory statistics got their validator in
+PR 7 (the ``plan_audit`` floor/ceiling sandwich) and their lifetime
+certificate in PR 9 (``memory_audit``); this pass is the third leg, for
+the *compute* statistics (``model_flops_per_step``,
+``decode_attention_traffic``, ``decode_kernel_seconds``) and for the
+decisions made from them.
+
+**Per-cell cost sandwich.** Every smoke-matrix decode/prefill cell's
+closed jaxpr is walked by a per-equation cost interpreter:
+
+- ``dot_general`` / ``conv_general_dilated`` equations yield a certified
+  MAC-FLOP count (2 x output elements x contraction size); reductions
+  and element-wise primitives count one FLOP per element; data-movement
+  primitives (gather/scatter/reshape/transpose/slice/...) count zero.
+  ``scan`` bodies multiply by trip count; ``cond`` takes min over
+  branches on the floor side and max on the ceiling side; ``while``
+  contributes nothing to the floor and one iteration to the ceiling;
+  a ``pallas_call`` body is scaled by its grid size on the ceiling side
+  only (grid multiplicity is heuristic, so fused-kernel MACs never
+  inflate the certified floor).
+- operand/result bytes give two traffic bounds: a **floor** (step inputs
+  + outputs minus the provably-reused buffers — the donated cache output
+  that aliases its input is written only at the new token's slice, never
+  re-materialized) and a reuse-free **ceiling** (every equation's
+  operands and results spilled, no fusion).
+
+The analytic model is then sandwiched per cell, exactly like the memory
+sandwich: certified FLOP floor <= ``cost.flops`` <= ceiling, and traffic
+floor <= ``cost.physical_hbm_bytes()`` <= ceiling. The analytic FLOPs
+may sit above raw traced MACs (it prices the embedding lookup at matmul
+convention, 2 x vocab x d_model per token) and slightly below them for
+grouped-conv/SSM families whose 2ND convention undercounts — both
+conventions are explicit constants here, not silent slack.
+
+**Decision audits.** On top of the certified per-cell costs, the pass
+audits the *selections* through :meth:`PlanCompiler.selection_trace`:
+
+- **crossover monotonicity**: sweeping context length (and separately the
+  observed committed-page fraction) must flip the paged/gather choice at
+  most once — the analytic delta is linear in the swept statistic, so a
+  second flip (an inversion) means the cost terms lost their structure.
+  The committed-frac sweep is also directional: raising the fraction
+  only ever raises the paged cost, so the flip must be paged -> gather.
+- **forced-kernel consistency**: a compiler forced to an operator must
+  record that operator on every decode plan (attention-free families
+  record ``none``).
+- **donation-independence**: the donate knob changes the traffic
+  statistic by the same write-back term for every operator, so it must
+  never change the kernel choice.
+- **explain completeness**: every plan axis in
+  :data:`repro.core.strategies.PLAN_AXES` must be recorded by
+  ``ExecutionPlan.explain_axes()`` — a plan decision EXPLAIN cannot
+  surface is un-debuggable.
+- **trace-closure certificate**: the pow2 bucket ladder reachable from an
+  :class:`~repro.runtime.engine_config.EngineConfig` is finite and closed
+  under re-bucketing (``bucket_pow2`` is idempotent), so the set of jit
+  signatures the engine can ever request is a finite product — no
+  unbounded-retrace path exists.
+
+Run ``python -m repro.analysis.cost_audit --smoke``: audits the matrix,
+runs the planted-violation self-test (an inflated FLOP constant, a
+crossover inversion, and a plan axis missing from ``explain()`` must all
+be flagged), merges the ``cost`` section into ``ANALYSIS_report.json``,
+and exits non-zero on any clean-tree finding or self-test miss.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis import Finding
+from repro.analysis.matrix import (PAGE_SIZE, POOL_ARENAS, REPORT_PATH,
+                                   SMOKE_ARCHS, SMOKE_BUCKETS, SMOKE_DTYPES,
+                                   matrix_meta, merge_report, smoke_cells)
+from repro.analysis.plan_audit import (aval_bytes, resident_floor_bytes,
+                                       sub_jaxprs, trace_cell)
+from repro.config import InputShape, MeshConfig
+from repro.configs import get_config
+from repro.core.plan_cache import BucketPolicy, bucket_pow2
+from repro.core.planner import PlanCompiler
+from repro.core.strategies import PLAN_AXES
+from repro.models.model import build_model
+from repro.runtime.engine_config import EngineConfig
+
+# Sandwich conventions (documented, not silent slack):
+# - the analytic model counts the embedding lookup at matmul convention
+#   (2 x vocab x d_model FLOPs per token) where the trace does a gather;
+#   the ceiling gets that allowance explicitly (see _lookup_allowance).
+# - FLOP_FLOOR_SLACK absorbs counting-convention skew on grouped convs /
+#   SSM scans, where the analytic 2ND undercounts traced MACs by a few
+#   percent (mamba2 smoke: 2.5%). The floor is still a real bound: an
+#   analytic figure 5% under the traced must-do arithmetic is drift.
+# - FLOP_CEIL_SLACK covers transcendental weighting (exp/rsqrt count one
+#   FLOP here, several on hardware) and window-convention skew on the
+#   analytic attention term.
+FLOP_FLOOR_SLACK = 0.95
+FLOP_CEIL_SLACK = 1.25
+
+# data movement: zero FLOPs (the traffic bounds price these)
+_MOVEMENT = frozenset((
+    "gather", "scatter", "dynamic_slice", "dynamic_update_slice",
+    "broadcast_in_dim", "reshape", "transpose", "concatenate", "slice",
+    "iota", "convert_element_type", "select_n", "squeeze", "rev", "pad",
+    "copy", "stop_gradient", "split",
+))
+_REDUCE_PREFIXES = ("reduce_", "cum", "arg")
+
+
+@dataclass
+class CostBounds:
+    """Accumulated per-equation costs for one jaxpr body."""
+
+    macs_lo: float = 0.0      # certified MAC FLOPs (floor side)
+    flops_hi: float = 0.0     # MACs + element-wise + reduces (ceiling side)
+    eqn_bytes: float = 0.0    # reuse-free traffic: per-eqn operand+result
+
+    def add(self, other: "CostBounds", scale_lo: float = 1.0,
+            scale_hi: float = 1.0) -> None:
+        self.macs_lo += other.macs_lo * scale_lo
+        self.flops_hi += other.flops_hi * scale_hi
+        self.eqn_bytes += other.eqn_bytes * scale_hi
+
+
+def _shape_elems(av) -> int:
+    n = 1
+    for d in getattr(av, "shape", ()):
+        n *= int(d)
+    return n
+
+
+def _dot_flops(eqn) -> float:
+    """2 x output elements x contraction length for one dot_general."""
+    (lhs_contract, _), _ = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval
+    k = 1
+    for d in lhs_contract:
+        k *= int(lhs.shape[d])
+    return 2.0 * _shape_elems(eqn.outvars[0].aval) * k
+
+
+def _conv_flops(eqn) -> float:
+    """2 x output elements x (kernel spatial x in_channels / groups)."""
+    rhs = eqn.invars[1].aval
+    dn = eqn.params["dimension_numbers"]
+    out_ch = int(rhs.shape[dn.rhs_spec[0]])
+    k = _shape_elems(rhs) // max(1, out_ch)
+    return 2.0 * _shape_elems(eqn.outvars[0].aval) * k
+
+
+def _grid_steps(eqn) -> int:
+    """Total grid steps of a pallas_call (1 if unreadable)."""
+    gm = eqn.params.get("grid_mapping")
+    grid = getattr(gm, "grid", None) or eqn.params.get("grid") or ()
+    steps = 1
+    for g in grid:
+        try:
+            steps *= int(g)
+        except (TypeError, ValueError):
+            return 1
+    return max(1, steps)
+
+
+def jaxpr_cost(jaxpr) -> CostBounds:
+    """The per-equation cost interpreter (see module doc for the
+    conventions on scan/while/cond/pallas_call)."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    out = CostBounds()
+    for eqn in jx.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = int(eqn.params.get("length", 1))
+            out.add(jaxpr_cost(eqn.params["jaxpr"]), scale_lo=length,
+                    scale_hi=length)
+            continue
+        if name == "while":
+            # trip count is not static: nothing certified for the floor,
+            # one iteration for the ceiling (serving steps are while-free;
+            # the convention is recorded, not load-bearing)
+            for key in ("cond_jaxpr", "body_jaxpr"):
+                if key in eqn.params:
+                    out.add(jaxpr_cost(eqn.params[key]), scale_lo=0.0)
+            continue
+        if name == "cond":
+            branches = [jaxpr_cost(b) for b in eqn.params.get("branches", ())]
+            if branches:
+                out.macs_lo += min(b.macs_lo for b in branches)
+                out.flops_hi += max(b.flops_hi for b in branches)
+                out.eqn_bytes += max(b.eqn_bytes for b in branches)
+            continue
+        if name == "pallas_call":
+            body = eqn.params.get("jaxpr")
+            if body is not None:
+                # ceiling side only: grid multiplicity is heuristic, so
+                # fused-kernel MACs never inflate the certified floor
+                out.add(jaxpr_cost(body), scale_lo=0.0,
+                        scale_hi=_grid_steps(eqn))
+            out.eqn_bytes += sum(
+                aval_bytes(v.aval) for v in list(eqn.invars)
+                + list(eqn.outvars) if hasattr(v, "aval"))
+            continue
+        subs = sub_jaxprs(eqn)
+        if subs:          # pjit / custom_* / checkpoint: run-once bodies
+            for s in subs:
+                out.add(jaxpr_cost(s))
+            continue
+        out.eqn_bytes += sum(
+            aval_bytes(v.aval) for v in list(eqn.invars) + list(eqn.outvars)
+            if hasattr(v, "aval"))
+        if name == "dot_general":
+            f = _dot_flops(eqn)
+            out.macs_lo += f
+            out.flops_hi += f
+        elif name == "conv_general_dilated":
+            f = _conv_flops(eqn)
+            out.macs_lo += f
+            out.flops_hi += f
+        elif name in _MOVEMENT:
+            pass
+        elif name.startswith(_REDUCE_PREFIXES):
+            out.flops_hi += sum(_shape_elems(v.aval) for v in eqn.invars
+                                if hasattr(v, "aval"))
+        else:             # element-wise / transcendental: 1 FLOP / element
+            out.flops_hi += sum(_shape_elems(v.aval) for v in eqn.outvars)
+    return out
+
+
+def _lookup_allowance(cfg, kind: str, batch: int, seq: int) -> float:
+    """FLOPs the analytic model charges for the embedding lookup (matmul
+    convention) that the trace performs as a zero-FLOP gather."""
+    tokens = batch * (seq if kind != "decode" else 1)
+    return 2.0 * cfg.vocab_size * cfg.d_model * tokens
+
+
+# ---------------------------------------------------------------------------
+# per-cell sandwich
+# ---------------------------------------------------------------------------
+
+
+def audit_cell(arch: str, dtype: str, kind: str, batch: int, seq: int, *,
+               page: int = PAGE_SIZE, pool_arenas: int = POOL_ARENAS,
+               decode_kernel: str = "auto", flop_scale: float = 1.0,
+               traffic_scale: float = 1.0
+               ) -> Tuple[Dict[str, Any], List[Finding]]:
+    """Sandwich one cell's analytic FLOP and traffic statistics between
+    the jaxpr-derived bounds. ``flop_scale`` / ``traffic_scale`` are the
+    self-test hooks: they inflate the analytic figure as a drifted
+    constant in ``core/cost.py`` would."""
+    where = f"{arch}/{dtype}/{kind}/b{batch}s{seq}"
+    if kind == "decode" and decode_kernel != "auto":
+        where += f"/{decode_kernel}"
+    cfg = get_config(arch)
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    model = build_model(cfg, dtype=dtype)
+    compiler = PlanCompiler(cache_page_size=page,
+                            cache_pool_arenas=pool_arenas,
+                            decode_kernel=decode_kernel)
+    shape = InputShape(f"req_{batch}x{seq}", seq, batch, kind)
+    plan = compiler.compile(cfg, shape, mesh_cfg, dtype=dtype)
+    closed, _out_tree, cache = trace_cell(model, plan, mesh_cfg, kind,
+                                          batch, seq, page=page)
+    bounds = jaxpr_cost(closed.jaxpr)
+
+    flop_floor = FLOP_FLOOR_SLACK * bounds.macs_lo
+    flop_ceiling = FLOP_CEIL_SLACK * (
+        bounds.flops_hi + _lookup_allowance(cfg, kind, batch, seq))
+    analytic_flops = plan.cost.flops * flop_scale
+
+    # provably-reused buffers: a donated cache output aliases its input —
+    # only the new token's slice is written, never a full re-materialized
+    # copy, so those output bytes leave the traffic floor
+    reused = 0
+    if kind == "decode" and plan.config.donate_cache and cache is not None:
+        reused = sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+                     for s in cache.values())
+    traffic_floor = resident_floor_bytes(closed, reused)
+    traffic_ceiling = bounds.eqn_bytes
+    analytic_traffic = plan.cost.physical_hbm_bytes() * traffic_scale
+
+    findings: List[Finding] = []
+    if analytic_flops < flop_floor:
+        findings.append(Finding(
+            rule="flop-under-estimate", where=where,
+            detail=f"analytic {analytic_flops:.3g} FLOPs below the "
+                   f"certified floor {flop_floor:.3g} (traced MACs "
+                   f"{bounds.macs_lo:.3g}) — the roofline compute term "
+                   f"under-prices the step"))
+    elif analytic_flops > flop_ceiling:
+        findings.append(Finding(
+            rule="flop-over-estimate", where=where,
+            detail=f"analytic {analytic_flops:.3g} FLOPs above the "
+                   f"derived ceiling {flop_ceiling:.3g} — a cost-model "
+                   f"constant has drifted (inflated FLOP term)"))
+    if analytic_traffic < traffic_floor:
+        findings.append(Finding(
+            rule="traffic-under-estimate", where=where,
+            detail=f"analytic {analytic_traffic:.3g}B physical traffic "
+                   f"below the floor {traffic_floor:.3g}B (inputs + "
+                   f"non-reused outputs must cross HBM) — the memory "
+                   f"roofline term under-prices the step"))
+    elif analytic_traffic > traffic_ceiling:
+        findings.append(Finding(
+            rule="traffic-over-estimate", where=where,
+            detail=f"analytic {analytic_traffic:.3g}B physical traffic "
+                   f"above the reuse-free ceiling {traffic_ceiling:.3g}B "
+                   f"— the statistic exceeds even a fusion-free "
+                   f"execution"))
+    record = {
+        "arch": arch, "dtype": dtype, "kind": kind,
+        "batch": batch, "seq": seq,
+        "decode_kernel": plan.config.decode_kernel,
+        "forced_kernel": decode_kernel,
+        "flops": {
+            "floor": float(flop_floor),
+            "analytic": float(analytic_flops),
+            "ceiling": float(flop_ceiling),
+            "traced_macs": float(bounds.macs_lo),
+        },
+        "traffic": {
+            "floor_bytes": float(traffic_floor),
+            "analytic_bytes": float(analytic_traffic),
+            "ceiling_bytes": float(traffic_ceiling),
+            "reused_bytes": float(reused),
+        },
+        "findings": len(findings),
+    }
+    return record, findings
+
+
+# ---------------------------------------------------------------------------
+# decision audits (pure checkers + the sweeps that feed them)
+# ---------------------------------------------------------------------------
+
+
+def check_selection_monotonic(picks: Sequence[Tuple[Any, str]], where: str,
+                              axis: str = "seq") -> List[Finding]:
+    """No crossover inversions along one swept statistic.
+
+    ``picks`` is the ordered [(coordinate, kernel), ...] a sweep
+    produced. The analytic paged-vs-gather delta is linear in the swept
+    statistic (cache bytes and grid steps both scale with it), so a valid
+    selection sequence flips at most once; a second flip means the cost
+    terms lost the structure selection relies on. The committed-frac
+    sweep is additionally directional: raising the fraction only raises
+    the paged cost, so the single admissible flip is paged -> gather."""
+    out: List[Finding] = []
+    kernels = [k for _, k in picks]
+    flips = [(picks[i - 1], picks[i]) for i in range(1, len(kernels))
+             if kernels[i] != kernels[i - 1]]
+    if len(flips) > 1:
+        pts = ", ".join(f"{a[1]}@{a[0]}->{b[1]}@{b[0]}" for a, b in flips)
+        out.append(Finding(
+            rule="crossover-inversion", where=where,
+            detail=f"kernel choice flips {len(flips)} times along the "
+                   f"{axis} sweep ({pts}); the analytic delta is linear "
+                   f"in {axis}, so at most one crossover is possible"))
+    elif flips and axis == "committed_frac":
+        (_, k_lo), (_, k_hi) = flips[0]
+        if (k_lo, k_hi) != ("paged", "gather"):
+            out.append(Finding(
+                rule="crossover-inversion", where=where,
+                detail=f"committed-frac sweep flips {k_lo} -> {k_hi}; "
+                       f"raising the fraction only raises the paged "
+                       f"cost, so only paged -> gather is admissible"))
+    return out
+
+
+def check_explain_axes(axes: Dict[str, str], where: str) -> List[Finding]:
+    """Every plan axis must be recorded by ``explain_axes()``."""
+    missing = [a for a in PLAN_AXES if a not in axes]
+    return [Finding(
+        rule="explain-axis-missing", where=where,
+        detail=f"plan axis {a!r} is not recorded by "
+               f"ExecutionPlan.explain(): the decision cannot be "
+               f"debugged from EXPLAIN output") for a in missing]
+
+
+def _sweep_seqs(max_seq: int = 8192) -> List[int]:
+    s, out = 16, []
+    while s <= max_seq:
+        out.append(s)
+        s *= 2
+    return out
+
+
+def audit_decisions(archs: Sequence[str] = SMOKE_ARCHS,
+                    dtypes: Sequence[str] = SMOKE_DTYPES,
+                    page: int = PAGE_SIZE,
+                    pool_arenas: int = POOL_ARENAS,
+                    log=None) -> Tuple[Dict[str, Any], List[Finding]]:
+    """The full plan-axis cross product of selection checks: crossover
+    monotonicity (context-length and committed-frac sweeps),
+    forced-kernel consistency, donation-independence, and explain
+    completeness, per (arch x dtype x bucket)."""
+    findings: List[Finding] = []
+    sweeps: List[Dict[str, Any]] = []
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    for arch in archs:
+        cfg = get_config(arch)
+        for dtype in dtypes:
+            where = f"{arch}/{dtype}"
+            compiler = PlanCompiler(cache_page_size=page,
+                                    cache_pool_arenas=pool_arenas)
+            # crossover monotonicity in context length
+            picks = [(s, compiler.selection_trace(
+                cfg, InputShape("sweep", s, 4, "decode"))["kernel"])
+                for s in _sweep_seqs()]
+            findings += check_selection_monotonic(
+                picks, f"{where}/seq-sweep", axis="seq")
+            # crossover monotonicity in committed pages
+            shape = InputShape("sweep", 128, 4, "decode")
+            fracs = [i / 20.0 for i in range(1, 21)]
+            frac_picks = [(f, compiler.selection_trace(
+                cfg, shape, committed_frac=f)["kernel"]) for f in fracs]
+            findings += check_selection_monotonic(
+                frac_picks, f"{where}/frac-sweep", axis="committed_frac")
+            sweeps.append({"arch": arch, "dtype": dtype,
+                           "seq_picks": [[s, k] for s, k in picks],
+                           "frac_picks": [[f, k] for f, k in frac_picks]})
+            for batch, seq in SMOKE_BUCKETS:
+                shape = InputShape(f"b{batch}s{seq}", seq, batch, "decode")
+                cell = f"{where}/b{batch}s{seq}"
+                # forced-kernel consistency across the forced axis
+                for forced in ("paged", "gather", "ref"):
+                    fc = PlanCompiler(cache_page_size=page,
+                                      cache_pool_arenas=pool_arenas,
+                                      decode_kernel=forced)
+                    got = fc.compile(cfg, shape, mesh_cfg,
+                                     dtype=dtype).config.decode_kernel
+                    want = ("none" if cfg.layer_pattern().count("a") == 0
+                            else forced)
+                    if got != want:
+                        findings.append(Finding(
+                            rule="forced-kernel-mismatch", where=cell,
+                            detail=f"compiler forced {forced!r} but the "
+                                   f"plan records {got!r} "
+                                   f"(expected {want!r})"))
+                # donation-independence of the kernel choice
+                kernels = set()
+                for donate in (True, False):
+                    dc = PlanCompiler(cache_page_size=page,
+                                      cache_pool_arenas=pool_arenas,
+                                      donate_cache=donate)
+                    kernels.add(dc.compile(cfg, shape, mesh_cfg,
+                                           dtype=dtype).config.decode_kernel)
+                if len(kernels) > 1:
+                    findings.append(Finding(
+                        rule="donation-dependent-kernel", where=cell,
+                        detail=f"kernel choice depends on the donate "
+                               f"knob ({sorted(kernels)}); the write-back "
+                               f"term is operator-independent, so it "
+                               f"must never move the crossover"))
+                # explain completeness over every plan axis
+                plan = PlanCompiler(
+                    cache_page_size=page,
+                    cache_pool_arenas=pool_arenas).compile(
+                        cfg, shape, mesh_cfg, dtype=dtype)
+                findings += check_explain_axes(plan.explain_axes(), cell)
+            if log:
+                log(f"  {where}: seq sweep "
+                    f"{'/'.join(k for _, k in picks)}")
+    return {"sweeps": sweeps}, findings
+
+
+# ---------------------------------------------------------------------------
+# trace-closure certificate
+# ---------------------------------------------------------------------------
+
+
+def _bucket_ladder(max_value: int, minimum: int) -> List[int]:
+    """All buckets reachable from requests bounded by ``max_value``."""
+    out, b = [], bucket_pow2(1, minimum)
+    top = bucket_pow2(max_value, minimum)
+    while b <= top:
+        out.append(b)
+        b *= 2
+    return out
+
+
+def trace_closure_certificate(
+        engine: Optional[EngineConfig] = None,
+        policy: Optional[BucketPolicy] = None,
+        max_seq: int = 65_536) -> Tuple[Dict[str, Any], List[Finding]]:
+    """Certify that the jit-signature set reachable from an EngineConfig
+    is finite. Signatures are keyed by (kind, batch bucket, seq bucket,
+    decode kernel, donate); the bucket ladders are finite pow2 sets, the
+    kernel axis is bounded by the operator vocabulary (dynamic
+    recompilation can flip paged <-> gather per bucket), and donate is
+    pinned by the config — so the product is finite *provided* bucketing
+    is closed (idempotent: re-bucketing a bucketed shape is a fixed
+    point, so re-entrant recompiles mint no new signatures). Idempotence
+    and coverage are checked bucket by bucket, not assumed."""
+    engine = engine or EngineConfig()
+    policy = policy or BucketPolicy()
+    findings: List[Finding] = []
+    where = "trace-closure"
+    batches = _bucket_ladder(engine.max_group_batch, policy.min_batch)
+    seqs = _bucket_ladder(max_seq, policy.min_seq)
+    # closure: every ladder entry is a fixed point of its own bucketing
+    for b in batches:
+        if bucket_pow2(b, policy.min_batch) != b:
+            findings.append(Finding(
+                rule="trace-closure", where=where,
+                detail=f"batch bucket {b} is not a bucketing fixed point "
+                       f"— re-entrant recompiles mint new signatures"))
+    for s in seqs:
+        if bucket_pow2(s, policy.min_seq) != s:
+            findings.append(Finding(
+                rule="trace-closure", where=where,
+                detail=f"seq bucket {s} is not a bucketing fixed point"))
+    # coverage: boundary request sizes land inside the ladder
+    probes = [1, 2, 3, max_seq // 2 + 1, max_seq]
+    for n in probes:
+        if 1 <= n <= max_seq and bucket_pow2(n, policy.min_seq) not in seqs:
+            findings.append(Finding(
+                rule="trace-closure", where=where,
+                detail=f"request seq {n} buckets outside the ladder"))
+    kinds = ("decode", "prefill") if engine.prefill else ("decode",)
+    kernels = (1 if engine.decode_kernel != "auto"
+               else 2)   # auto: recompile can flip paged <-> gather
+    signatures = len(batches) * len(seqs) * len(kinds) * kernels
+    bound = ((math.floor(math.log2(max(batches) // min(batches))) + 1)
+             * (math.floor(math.log2(max(seqs) // min(seqs))) + 1)
+             * len(kinds) * kernels)
+    if signatures > bound:
+        findings.append(Finding(
+            rule="trace-closure", where=where,
+            detail=f"{signatures} reachable signatures exceed the "
+                   f"log-product bound {bound}"))
+    record = {
+        "batch_buckets": batches,
+        "seq_buckets": seqs,
+        "kinds": list(kinds),
+        "kernel_axis": kernels,
+        "signatures": signatures,
+        "bound": bound,
+        "finite": not findings,
+    }
+    return record, findings
+
+
+# ---------------------------------------------------------------------------
+# smoke driver
+# ---------------------------------------------------------------------------
+
+
+def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
+              dtypes: Sequence[str] = SMOKE_DTYPES,
+              buckets: Sequence[Tuple[int, int]] = SMOKE_BUCKETS,
+              kinds: Sequence[str] = ("decode", "prefill"),
+              page: int = PAGE_SIZE,
+              pool_arenas: int = POOL_ARENAS,
+              log=None) -> Tuple[List[Dict[str, Any]], List[Finding]]:
+    cells: List[Dict[str, Any]] = []
+    findings: List[Finding] = []
+    for cell in smoke_cells(archs=archs, dtypes=dtypes, buckets=buckets,
+                            kinds=kinds):
+        rec, found = audit_cell(cell.arch, cell.dtype, cell.kind,
+                                cell.batch, cell.seq, page=page,
+                                pool_arenas=pool_arenas,
+                                decode_kernel=cell.forced_kernel)
+        cells.append(rec)
+        findings.extend(found)
+        if log:
+            fl, tr = rec["flops"], rec["traffic"]
+            log(f"  {cell.where}: flops "
+                f"{fl['floor']:.3g} <= {fl['analytic']:.3g} <= "
+                f"{fl['ceiling']:.3g}; traffic "
+                f"{tr['floor_bytes']:.3g} <= {tr['analytic_bytes']:.3g} "
+                f"<= {tr['ceiling_bytes']:.3g}; "
+                f"{rec['findings']} finding(s)")
+    return cells, findings
+
+
+# ---------------------------------------------------------------------------
+# self-test: planted violations the auditor must flag
+# ---------------------------------------------------------------------------
+
+
+def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
+    """Three planted violations (an inflated FLOP constant, a crossover
+    inversion, a plan axis missing from explain) plus a clean control."""
+    _, clean = audit_cell(arch, "bfloat16", "decode", 2, 64,
+                          decode_kernel="gather")
+    # a 64x-inflated FLOP constant must overflow the derived ceiling
+    _, inflated = audit_cell(arch, "bfloat16", "decode", 2, 64,
+                             decode_kernel="gather", flop_scale=64.0)
+    # and a 64x-deflated one must fall through the certified floor
+    _, deflated = audit_cell(arch, "bfloat16", "decode", 2, 64,
+                             decode_kernel="gather", flop_scale=1 / 64.0)
+
+    # a doctored selection sweep with a second flip (the inversion) must
+    # flag; the real compiler sweep must not
+    doctored = [(64, "gather"), (128, "paged"), (256, "gather"),
+                (512, "paged")]
+    inversion = check_selection_monotonic(doctored, "selftest/doctored")
+    compiler = PlanCompiler(cache_page_size=PAGE_SIZE,
+                            cache_pool_arenas=POOL_ARENAS)
+    cfg = get_config(arch)
+    honest = check_selection_monotonic(
+        [(s, compiler.selection_trace(
+            cfg, InputShape("sweep", s, 4, "decode"))["kernel"])
+         for s in _sweep_seqs()], "selftest/honest")
+
+    # a plan axis dropped from the explain record must flag; the full
+    # record must not
+    mesh_cfg = MeshConfig(shape=(1,), axis_names=("data",))
+    plan = compiler.compile(cfg, InputShape("probe", 64, 2, "decode"),
+                            mesh_cfg, dtype="bfloat16")
+    axes = dict(plan.explain_axes())
+    axes.pop("decode_kernel")
+    missing = check_explain_axes(axes, "selftest/dropped-axis")
+    complete = check_explain_axes(plan.explain_axes(), "selftest/full")
+    return {
+        "clean_control": not clean,
+        "inflated_flops_flagged": any(f.rule == "flop-over-estimate"
+                                      for f in inflated),
+        "deflated_flops_flagged": any(f.rule == "flop-under-estimate"
+                                      for f in deflated),
+        "crossover_inversion_flagged": (
+            any(f.rule == "crossover-inversion" for f in inversion)
+            and not honest),
+        "missing_explain_axis_flagged": (
+            any(f.rule == "explain-axis-missing" for f in missing)
+            and not complete),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="jaxpr-derived FLOP/traffic bounds auditing the "
+                    "planner's cost model and its selection decisions")
+    ap.add_argument("--smoke", action="store_true",
+                    help="audit the CI smoke matrix (cost sandwich + "
+                         "selection invariants + trace closure) plus the "
+                         "planted-violation self-test")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="override the arch list")
+    ap.add_argument("--report", default=REPORT_PATH,
+                    help=f"JSON report path (default {REPORT_PATH})")
+    ap.add_argument("--no-selftest", action="store_true",
+                    help="skip the planted-violation self-test")
+    args = ap.parse_args(argv)
+
+    archs = tuple(args.archs) if args.archs else SMOKE_ARCHS
+    print(f"cost_audit: {len(archs)} arch(s) x {len(SMOKE_DTYPES)} dtypes "
+          f"x {len(SMOKE_BUCKETS)} buckets")
+    cells, findings = run_audit(archs=archs, log=print)
+    decisions, dec_findings = audit_decisions(archs=archs, log=print)
+    findings += dec_findings
+    closure, cls_findings = trace_closure_certificate()
+    findings += cls_findings
+    print(f"  trace closure: {closure['signatures']} reachable jit "
+          f"signatures (bound {closure['bound']}), "
+          f"finite={closure['finite']}")
+
+    st: Dict[str, Any] = {}
+    if not args.no_selftest:
+        st = selftest()
+        for probe, ok in st.items():
+            print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
+
+    merge_report(args.report, {"cost": {
+        "matrix": matrix_meta(archs=archs),
+        "cells": cells,
+        "decisions": decisions,
+        "trace_closure": closure,
+        "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
+                     for f in findings],
+        "selftest": st,
+    }})
+
+    for f in findings:
+        print(f)
+    missed = [k for k, ok in st.items() if not ok]
+    print(f"cost_audit: {len(cells)} cells, {len(findings)} finding(s), "
+          f"report -> {args.report} [cost]")
+    if missed:
+        print(f"cost_audit: self-test MISSED: {', '.join(missed)}")
+    return 1 if findings or missed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,12 @@ now maintains by convention; the linter turns each into a CI gate:
 - ``plan-cache-mutation`` — :class:`~repro.core.plan_cache.PlanCache`
   owns its entry dict; reaching into ``._entries`` bypasses LRU metrics
   and capacity accounting.
+- ``plan-axis-in-explain`` — every ``PlanConfig`` field except ``notes``
+  is a plan axis and must be read by an ``explain_axes()`` / ``explain()``
+  renderer in the same module: a plan decision EXPLAIN cannot surface is
+  un-debuggable (the PR-10 cost auditor checks the rendered dict at
+  runtime; this rule catches the dropped axis at lint time, before any
+  plan is ever compiled).
 - ``use-after-donation`` — decode steps donate their cache argument
   (positional 1) to XLA; in tick-path modules a cache reference passed
   to a ``.step_fn(...)`` call must not be read again before it is
@@ -323,6 +329,43 @@ def use_after_donation(ctx: _Ctx) -> None:
     for node in ast.walk(ctx.tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             scan_block(node.body, [])
+
+
+@rule
+def plan_axis_in_explain(ctx: _Ctx) -> None:
+    """Each PlanConfig axis must be rendered by explain_axes()/explain().
+
+    Scoped to modules that define ``class PlanConfig``. Axes are the
+    annotated fields minus ``notes`` (mirroring
+    ``repro.core.strategies.PLAN_AXES``); a field counts as rendered when
+    any ``explain_axes`` / ``explain`` function in the module reads it as
+    an attribute."""
+    plan_cls = next(
+        (n for n in ast.walk(ctx.tree)
+         if isinstance(n, ast.ClassDef) and n.name == "PlanConfig"), None)
+    if plan_cls is None:
+        return
+    fields = [s for s in plan_cls.body
+              if isinstance(s, ast.AnnAssign)
+              and isinstance(s.target, ast.Name)
+              and s.target.id != "notes"]
+    renderers = [n for n in ast.walk(ctx.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name in ("explain_axes", "explain")]
+    if not renderers:
+        ctx.report("plan-axis-in-explain", plan_cls,
+                   "module defines PlanConfig but no explain_axes()/"
+                   "explain() renderer; plan decisions have no EXPLAIN "
+                   "surface")
+        return
+    rendered = {node.attr for fn in renderers
+                for node in ast.walk(fn) if isinstance(node, ast.Attribute)}
+    for f in fields:
+        if f.target.id not in rendered:
+            ctx.report("plan-axis-in-explain", f,
+                       f"PlanConfig field {f.target.id!r} is a plan axis "
+                       f"but is never read by explain_axes()/explain() — "
+                       f"the decision cannot be surfaced by EXPLAIN")
 
 
 @rule

@@ -40,10 +40,8 @@ tree path in :func:`classify_leaves`, so a new step input only needs a
 from __future__ import annotations
 
 import argparse
-import json
 import re
 import sys
-from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -51,9 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import Finding
-from repro.analysis.plan_audit import (PAGE_SIZE, POOL_ARENAS, REPORT_PATH,
-                                       SMOKE_ARCHS, SMOKE_BUCKETS,
-                                       SMOKE_DTYPES)
+from repro.analysis.matrix import (PAGE_SIZE, POOL_ARENAS, REPORT_PATH,
+                                   SMOKE_ARCHS, SMOKE_BUCKETS, SMOKE_DTYPES,
+                                   matrix_meta, smoke_cells)
+from repro.analysis.matrix import merge_report as _merge_report
 from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
 from repro.core.planner import PlanCompiler
@@ -233,25 +232,23 @@ def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
               log=None) -> Tuple[List[Dict[str, Any]], List[Finding]]:
     cells: List[Dict[str, Any]] = []
     findings: List[Finding] = []
-    for arch in archs:
-        for dtype in dtypes:
-            for batch, seq in buckets:
-                for dk in ("paged", "gather"):
-                    rec, found = audit_cell(
-                        arch, dtype, batch, seq, page=page,
-                        pool_arenas=pool_arenas, decode_kernel=dk,
-                        donate=donate)
-                    cells.append(rec)
-                    findings.extend(found)
-                    if log:
-                        slot = rec["classes"].get("attention-slot-stack")
-                        state = rec["classes"].get("recurrent-state")
-                        log(f"  {arch}/{dtype}/b{batch}s{seq}[{dk}]: "
-                            f"slot-stack="
-                            f"{slot['lifetime'] if slot else 'n/a'} "
-                            f"state={state['lifetime'] if state else 'n/a'} "
-                            f"peak={rec['certified_peak_bytes']}B "
-                            f"{rec['findings']} finding(s)")
+    for cell in smoke_cells(archs=archs, dtypes=dtypes, buckets=buckets,
+                            kinds=("decode",)):
+        rec, found = audit_cell(
+            cell.arch, cell.dtype, cell.batch, cell.seq, page=page,
+            pool_arenas=pool_arenas, decode_kernel=cell.forced_kernel,
+            donate=donate)
+        cells.append(rec)
+        findings.extend(found)
+        if log:
+            slot = rec["classes"].get("attention-slot-stack")
+            state = rec["classes"].get("recurrent-state")
+            log(f"  {cell.where}: "
+                f"slot-stack="
+                f"{slot['lifetime'] if slot else 'n/a'} "
+                f"state={state['lifetime'] if state else 'n/a'} "
+                f"peak={rec['certified_peak_bytes']}B "
+                f"{rec['findings']} finding(s)")
     return cells, findings
 
 
@@ -279,16 +276,12 @@ def selftest(arch: str = "yi-6b-smoke") -> Dict[str, Any]:
 
 def merge_report(path: str, memory: Dict[str, Any]) -> None:
     """Land the audit under the ``memory`` section of the (shared)
-    analysis report, preserving whatever the plan auditor wrote."""
-    p = Path(path)
-    report: Dict[str, Any] = {}
-    if p.exists():
-        try:
-            report = json.loads(p.read_text())
-        except (OSError, json.JSONDecodeError):
-            report = {}
-    report["memory"] = memory
-    p.write_text(json.dumps(report, indent=2))
+    analysis report, preserving every section the other passes wrote.
+    Delegates to :func:`repro.analysis.matrix.merge_report`, which also
+    survives a corrupt or non-dict report on disk — the historical
+    failure mode was this function quietly discarding the plan auditor's
+    sections when the on-disk JSON was not the dict it expected."""
+    _merge_report(path, {"memory": memory})
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -323,9 +316,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
 
     memory = {
-        "matrix": {"archs": list(archs), "dtypes": list(SMOKE_DTYPES),
-                   "buckets": [list(b) for b in SMOKE_BUCKETS],
-                   "kernels": ["paged", "gather"]},
+        "matrix": matrix_meta(archs=archs, kernels=["paged", "gather"]),
         "cells": cells,
         "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
                      for f in findings],

@@ -55,9 +55,7 @@ self-test miss.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
-from pathlib import Path
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -66,25 +64,23 @@ import numpy as np
 from jax._src.core import Literal
 
 from repro.analysis import Finding
+from repro.analysis.matrix import (PAGE_SIZE, POOL_ARENAS,  # noqa: F401
+                                   REPORT_PATH, SMOKE_ARCHS, SMOKE_BUCKETS,
+                                   SMOKE_DTYPES, matrix_meta, merge_report,
+                                   smoke_cells)
 from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
 from repro.core.planner import LONG_CONTEXT_THRESHOLD, PlanCompiler
 from repro.models.model import build_model
 from repro.runtime.serve_loop import make_decode_step, make_prefill
 
-# the CI smoke matrix: one arch per serving family (attention / SSD /
-# RG-LRU hybrid), both serving dtypes, two buckets spanning the pow2 grid
-SMOKE_ARCHS = ("yi-6b-smoke", "mamba2-1.3b-smoke", "recurrentgemma-2b-smoke")
-SMOKE_DTYPES = ("bfloat16", "float32")
-SMOKE_BUCKETS = ((1, 64), (4, 128))
-PAGE_SIZE = 64
-POOL_ARENAS = 4          # what PlanServer provisions by default
+# The smoke-matrix constants live in repro.analysis.matrix (shared by all
+# three statistics passes) and are re-exported here for compatibility.
 WORKSPACE_FRACTION = 0.08  # mirrors core/memory.py's workspace class
 
 LOW_PRECISION = (jnp.bfloat16, jnp.float16)
 WIDE = (np.dtype("float32"), np.dtype("float64"))
 HOST_SYNC_MARKERS = ("callback", "infeed", "outfeed", "host_")
-REPORT_PATH = "ANALYSIS_report.json"
 
 
 # ---------------------------------------------------------------------------
@@ -447,30 +443,18 @@ def run_audit(archs: Sequence[str] = SMOKE_ARCHS,
               log=None) -> Tuple[List[Dict[str, Any]], List[Finding]]:
     cells: List[Dict[str, Any]] = []
     findings: List[Finding] = []
-    for arch in archs:
-        for dtype in dtypes:
-            for kind in kinds:
-                if kind == "prefill" and not build_model(
-                        get_config(arch), dtype=dtype).supports_handoff:
-                    continue   # modality frontends prefill out of band
-                # decode cells run under both forced operators so both
-                # physical read paths are traced and asserted; prefill has
-                # no decode-attention operator to choose
-                kernels = ("paged", "gather") if kind == "decode" else ("auto",)
-                for batch, seq in buckets:
-                    for dk in kernels:
-                        rec, found = audit_cell(arch, dtype, kind, batch,
-                                                seq, page=page,
-                                                pool_arenas=pool_arenas,
-                                                decode_kernel=dk)
-                        cells.append(rec)
-                        findings.extend(found)
-                        if log:
-                            log(f"  {rec['arch']}/{rec['dtype']}"
-                                f"/{rec['kind']}/b{batch}s{seq}"
-                                f"[{dk}]: {rec['eqns']} eqns, kernel="
-                                f"{rec['decode_kernel']}, "
-                                f"{rec['findings']} finding(s)")
+    for cell in smoke_cells(archs=archs, dtypes=dtypes, buckets=buckets,
+                            kinds=kinds):
+        rec, found = audit_cell(cell.arch, cell.dtype, cell.kind, cell.batch,
+                                cell.seq, page=page,
+                                pool_arenas=pool_arenas,
+                                decode_kernel=cell.forced_kernel)
+        cells.append(rec)
+        findings.extend(found)
+        if log:
+            log(f"  {cell.where}: {rec['eqns']} eqns, kernel="
+                f"{rec['decode_kernel']}, "
+                f"{rec['findings']} finding(s)")
     return cells, findings
 
 
@@ -595,23 +579,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for probe, ok in st.items():
             print(f"  selftest {probe}: {'ok' if ok else 'MISSED'}")
 
-    # the report file is shared with the memory auditor (its aliasing
-    # certificate lives under "memory"): update our sections in place
-    report: Dict[str, Any] = {}
-    if Path(args.report).exists():
-        try:
-            report = json.loads(Path(args.report).read_text())
-        except (OSError, json.JSONDecodeError):
-            report = {}
-    report.update({
-        "matrix": {"archs": list(archs), "dtypes": list(SMOKE_DTYPES),
-                   "buckets": [list(b) for b in SMOKE_BUCKETS]},
+    # the report file is shared with the memory and cost auditors (their
+    # sections live under "memory" / "cost"): update ours in place
+    merge_report(args.report, {
+        "matrix": matrix_meta(archs=archs),
         "cells": cells,
         "findings": [{"rule": f.rule, "where": f.where, "detail": f.detail}
                      for f in findings],
         "selftest": st,
     })
-    Path(args.report).write_text(json.dumps(report, indent=2))
 
     for f in findings:
         print(f)

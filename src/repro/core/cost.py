@@ -19,10 +19,12 @@ Two entry points:
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import List, Tuple
 
 from repro.config import HardwareSpec, InputShape, MeshConfig, ModelConfig
-from repro.core.memory import ACT_BYTES, PARAM_BYTES, _cache_dense_bytes, _cache_eff_seq
+from repro.core.memory import (ACT_BYTES, PARAM_BYTES, _cache_dense_bytes,
+                               _cache_eff_seq, dtype_bytes)
 from repro.core.strategies import PlanConfig
 
 # Paged-kernel grid dispatch cost per (layer, row, kv-head, page) grid step,
@@ -31,6 +33,23 @@ from repro.core.strategies import PlanConfig
 # comparison (SystemML-style operator selection by data characteristics,
 # not a fixed winner): a bucket with many tiny pages pays it linearly.
 PAGED_STEP_LATENCY_S = 2e-8
+
+
+@dataclass(frozen=True)
+class CostTerm:
+    """One named addend of the analytic model, queryable by the auditors.
+
+    ``physical`` distinguishes bytes that actually cross the HBM interface
+    from latency folded into byte currency (the paged-kernel grid-dispatch
+    term): a jaxpr-derived traffic bound can only be compared against the
+    physical subtotal, never the folded-latency one.
+    """
+
+    name: str
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    physical: bool = True
 
 
 @dataclass
@@ -42,6 +61,23 @@ class CostEstimate:
     hbm_bytes: float = 0.0
     collective_bytes: float = 0.0
     model_flops: float = 0.0
+    # the named addends behind flops / hbm_bytes (empty for measured
+    # estimates from roofline_terms: measurement has no decomposition)
+    terms: List[CostTerm] = field(default_factory=list)
+
+    def term(self, name: str) -> CostTerm:
+        for t in self.terms:
+            if t.name == name:
+                return t
+        return CostTerm(name)
+
+    def physical_hbm_bytes(self) -> float:
+        """HBM bytes excluding folded-latency terms — the quantity a
+        traffic bound derived from the program can be compared against.
+        Falls back to ``hbm_bytes`` when no decomposition is recorded."""
+        if not self.terms:
+            return self.hbm_bytes
+        return sum(t.hbm_bytes for t in self.terms if t.physical)
 
     @property
     def dominant(self) -> str:
@@ -138,11 +174,14 @@ def decode_attention_traffic(
     shape: InputShape,
     kernel: str,
     committed_frac: float = 1.0,
+    nb: int = ACT_BYTES,
+    donated: bool = True,
 ) -> float:
     """Decode-attention HBM bytes for one physical operator choice.
 
     The three operators move very different amounts of cache-sized data
-    per decode step (C = committed KV bytes, g = query heads per kv head):
+    per decode step (C = committed KV bytes at ``nb`` bytes/element,
+    g = query heads per kv head):
 
     - ``paged``:  the fused kernel streams committed pages straight from
       the slot stack — C * committed_frac, no intermediates.
@@ -150,14 +189,26 @@ def decode_attention_traffic(
       the GQA-expanded copy (write + read) on top of the base stream:
       (2 + 2g) * C, uncommitted bucket slots included regardless of pos.
     - ``ref``:    the oracle path, same shape of traffic in fp32: 2x gather.
+
+    ``donated=False`` adds the full cache write-back C: an un-donated step
+    materializes a fresh output copy of the arena every tick, where the
+    donated step writes only the new token's slice in place. Kernel
+    *selection* never passes it (the write-back is identical for every
+    operator, so it cannot move the crossover — the donation-independence
+    invariant ``cost_audit`` certifies); the planner's per-plan traffic
+    statistic does.
     """
-    c = _cache_dense_bytes(model, shape.seq_len, shape.global_batch)
+    c = _cache_dense_bytes(model, shape.seq_len, shape.global_batch, nb=nb)
     if kernel == "paged":
-        return c * committed_frac
-    mult = 2.0 + 2.0 * model.q_per_kv
-    if kernel == "ref":
-        mult *= 2.0
-    return c * mult
+        t = c * committed_frac
+    else:
+        mult = 2.0 + 2.0 * model.q_per_kv
+        if kernel == "ref":
+            mult *= 2.0
+        t = c * mult
+    if not donated:
+        t += c
+    return t
 
 
 def _paged_grid_steps(model: ModelConfig, shape: InputShape, page: int) -> float:
@@ -194,26 +245,59 @@ def analytic_cost(
     plan: PlanConfig,
     hw: HardwareSpec,
     page: int = 0,
+    dtype: str = "bfloat16",
 ) -> CostEstimate:
+    """Planner-side cost statistic, decomposed into named :class:`CostTerm`
+    addends so ``repro.analysis.cost_audit`` can sandwich each aggregate
+    between jaxpr-derived bounds (and exclude the folded-latency dispatch
+    term from traffic comparisons). ``dtype`` is the compute dtype the
+    byte-sized terms are priced at — the serving stack runs bf16 and fp32
+    streams through the same planner, and an fp32 plan moves twice the
+    bytes per element."""
     chips = mesh.num_devices
+    nb = dtype_bytes(dtype)
     mf = model_flops_per_step(model, shape)
-    flops = mf + _attention_flops(model, shape)
+    terms: List[CostTerm] = [CostTerm("model_matmul", flops=mf)]
+    attn = _attention_flops(model, shape)
+    if attn:
+        terms.append(CostTerm("attention", flops=attn))
     if shape.kind == "train" and plan.remat:
-        flops *= 4.0 / 3.0  # one extra forward
+        # one extra forward
+        terms.append(CostTerm("remat_recompute", flops=(mf + attn) / 3.0))
 
-    p_bytes = model.param_count() * PARAM_BYTES
+    p_bytes = model.param_count() * max(PARAM_BYTES, nb)
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
-    act_traffic = tokens * model.d_model * ACT_BYTES * model.num_layers * 6
-    hbm = p_bytes * (3 if shape.kind == "train" else 1) + act_traffic
+    terms.append(CostTerm(
+        "params_stream", hbm_bytes=p_bytes * (3 if shape.kind == "train" else 1)))
+    terms.append(CostTerm(
+        "activations",
+        hbm_bytes=tokens * model.d_model * nb * model.num_layers * 6))
+    terms.append(CostTerm(
+        "logits_write", hbm_bytes=tokens * model.vocab_size * nb))
     if shape.kind == "decode":
-        hbm += decode_attention_traffic(model, shape, plan.decode_kernel)
+        terms.append(CostTerm(
+            "decode_attention",
+            hbm_bytes=decode_attention_traffic(
+                model, shape, plan.decode_kernel, nb=nb,
+                donated=plan.donate_cache)))
         if plan.decode_kernel == "paged" and page > 0:
             # grid dispatch overhead, folded in as equivalent HBM bytes so
-            # the roofline terms stay in one currency
-            hbm += _paged_grid_steps(model, shape, page) * PAGED_STEP_LATENCY_S * hw.hbm_bandwidth
+            # the roofline terms stay in one currency — latency, not
+            # physical traffic (physical=False keeps it out of the
+            # jaxpr-derived traffic sandwich)
+            terms.append(CostTerm(
+                "paged_dispatch", physical=False,
+                hbm_bytes=_paged_grid_steps(model, shape, page)
+                * PAGED_STEP_LATENCY_S * hw.hbm_bandwidth))
 
     coll = _collective_bytes(model, shape, mesh, plan)
-    return roofline_terms(flops, hbm, coll, chips, hw, model_flops=mf)
+    if coll:
+        terms.append(CostTerm("collectives", collective_bytes=coll))
+    est = roofline_terms(sum(t.flops for t in terms),
+                         sum(t.hbm_bytes for t in terms),
+                         coll, chips, hw, model_flops=mf)
+    est.terms = terms
+    return est
 
 
 def _collective_bytes(

@@ -59,6 +59,58 @@ class PlanCompiler:
         # then charge the transient second arena copy honestly
         self.donate_cache = bool(donate_cache)
 
+    def selection_trace(
+        self, model: ModelConfig, shape: InputShape,
+        committed_frac: float = 1.0,
+    ) -> dict:
+        """Every input and intermediate of decode-kernel selection, as a
+        record: the chosen kernel plus *why* — forced knob, attention-free
+        short-circuit, the VMEM block-fit test, and both candidate analytic
+        seconds when the cost comparison actually ran. This is the
+        introspection surface ``repro.analysis.cost_audit`` sweeps to
+        certify selection invariants (crossover monotonicity in context
+        length and committed pages, forced-kernel consistency,
+        donation-independence) without re-deriving the compiler's logic."""
+        page = self.cache_page_size
+        rec = {
+            "kernel": "gather",
+            "forced": self.decode_kernel,
+            "attention_free": model.layer_pattern().count("a") == 0,
+            "page": page,
+            "committed_frac": committed_frac,
+            "vmem_fit": None,       # None = fit test not reached
+            "paged_s": None,
+            "gather_s": None,
+            "reason": "",
+        }
+        if rec["attention_free"]:
+            rec.update(kernel="none",
+                       reason="attention-free family: no decode-attention op")
+            return rec
+        if self.decode_kernel != "auto":
+            rec.update(kernel=self.decode_kernel, reason="forced by compiler")
+            return rec
+        if shape.kind != "decode" or page <= 0:
+            rec.update(reason="dense (non-paged) serving path")
+            return rec
+        # device-memory fit of the kernel's per-block set: one K and one V
+        # physical page + the (g, D) query group + f32 accumulator scratch
+        d = model.head_dim
+        g = model.q_per_kv
+        blk = 2 * page * d * ACT_BYTES + g * d * ACT_BYTES + g * (d + 2) * 4
+        rec["vmem_fit"] = blk <= self.hw.vmem_bytes * 0.8
+        if not rec["vmem_fit"]:
+            rec.update(reason=f"page block {blk}B exceeds VMEM budget")
+            return rec
+        paged_s = decode_kernel_seconds(model, shape, self.hw, "paged", page,
+                                        committed_frac)
+        gather_s = decode_kernel_seconds(model, shape, self.hw, "gather", page,
+                                         committed_frac)
+        rec.update(paged_s=paged_s, gather_s=gather_s,
+                   kernel="paged" if paged_s < gather_s else "gather",
+                   reason="analytic cost comparison")
+        return rec
+
     def _select_decode_kernel(
         self, model: ModelConfig, shape: InputShape,
         committed_frac: float = 1.0,
@@ -72,25 +124,7 @@ class PlanCompiler:
         commitment (``committed_frac=1``) at compile time; dynamic
         recompilation re-enters with the observed fraction.
         """
-        if model.layer_pattern().count("a") == 0:
-            return "none"  # attention-free family: no decode-attention op
-        if self.decode_kernel != "auto":
-            return self.decode_kernel
-        page = self.cache_page_size
-        if shape.kind != "decode" or page <= 0:
-            return "gather"  # dense (non-paged) serving path
-        # device-memory fit of the kernel's per-block set: one K and one V
-        # physical page + the (g, D) query group + f32 accumulator scratch
-        d = model.head_dim
-        g = model.q_per_kv
-        blk = 2 * page * d * ACT_BYTES + g * d * ACT_BYTES + g * (d + 2) * 4
-        if blk > self.hw.vmem_bytes * 0.8:
-            return "gather"
-        paged_s = decode_kernel_seconds(model, shape, self.hw, "paged", page,
-                                        committed_frac)
-        gather_s = decode_kernel_seconds(model, shape, self.hw, "gather", page,
-                                         committed_frac)
-        return "paged" if paged_s < gather_s else "gather"
+        return self.selection_trace(model, shape, committed_frac)["kernel"]
 
     def _cache_kwargs(self, model: ModelConfig, shape: InputShape) -> dict:
         kw = {"cache_pool_arenas": self.cache_pool_arenas}
@@ -153,7 +187,7 @@ class PlanCompiler:
                 decode_kernel=self._select_decode_kernel(model, shape),
                 donate_cache=self.donate_cache)
         cost = analytic_cost(model, shape, mesh, chosen, self.hw,
-                             page=self.cache_page_size)
+                             page=self.cache_page_size, dtype=dtype)
         return ExecutionPlan(
             model=model, shape=shape, mesh=mesh, config=chosen,
             memory=chosen_mem, cost=cost, dtype=dtype,
@@ -231,7 +265,8 @@ class PlanCompiler:
                 )
                 plan.cost = analytic_cost(prior.model, shape, prior.mesh,
                                           plan.config, self.hw,
-                                          page=self.cache_page_size)
+                                          page=self.cache_page_size,
+                                          dtype=prior.dtype)
         plan.config = plan.config.replace(
             notes=plan.config.notes
             + (f"dynamic recompilation: runtime stats correction x{scale:.2f}",)

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from enum import Enum
-from typing import Tuple
+from typing import Dict, Tuple
 
 from repro.config import InputShape, MeshConfig, ModelConfig
 
@@ -81,6 +81,16 @@ class PlanConfig:
         return dataclasses.replace(self, **kw)
 
 
+# Every plan *axis* — the PlanConfig fields that parameterize an execution
+# plan (``notes`` is free-text provenance, not an axis). EXPLAIN output
+# must record each one: a plan axis that can change behaviour without
+# showing up in ``ExecutionPlan.explain()`` is an un-debuggable decision,
+# and both the ``plan-axis-in-explain`` lint rule and the cost auditor's
+# explain-completeness check enforce membership against this tuple.
+PLAN_AXES: Tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(PlanConfig) if f.name != "notes")
+
+
 @dataclass(frozen=True)
 class RuntimeStats:
     """Observed data/runtime characteristics of one executed request.
@@ -123,40 +133,68 @@ class ExecutionPlan:
     cost: "object" = None       # core.cost.CostEstimate
     dtype: str = "bfloat16"     # compute dtype the statistics were sized for
 
+    def explain_axes(self) -> Dict[str, str]:
+        """Every plan axis (:data:`PLAN_AXES`), rendered. This is the
+        authoritative record behind :meth:`explain`: an axis absent here is
+        a plan decision EXPLAIN cannot surface, which the
+        ``plan-axis-in-explain`` lint rule and the cost auditor's
+        explain-completeness check both flag. Add the entry *here* when
+        adding a PlanConfig field; ``explain()`` renders from this dict."""
+        c = self.config
+        return {
+            "strategy": c.strategy.value,
+            "batch_axes": str(c.batch_axes or "(replicated)"),
+            "seq_axes": str(c.seq_axes or "(unsharded)"),
+            "tensor_parallel": str(c.tensor_parallel),
+            "params_over_data": str(c.params_over_data),
+            "expert_parallel": str(c.expert_parallel),
+            "cache_batch_axes": str(c.cache_batch_axes or "(replicated)"),
+            "cache_heads_over_model": str(c.cache_heads_over_model),
+            "cache_seq_axes": str(c.cache_seq_axes or "()"),
+            "opt_state_dtype": c.opt_state_dtype,
+            "seq_shard_checkpoints": str(c.seq_shard_checkpoints),
+            "remat": str(c.remat),
+            "microbatches": str(c.microbatches),
+            "attention_variant": c.attention_variant,
+            "decode_kernel": c.decode_kernel,
+            "donate_cache": ("donated (in-place)" if c.donate_cache
+                             else "double-buffered"),
+        }
+
     def explain(self) -> str:
         """SystemML-style EXPLAIN output for the generated plan."""
-        c = self.config
+        ax = self.explain_axes()
         lines = [
             f"# EXECUTION PLAN  {self.model.name} x {self.shape.name} "
             f"x mesh{self.mesh.shape} [{self.dtype}]",
-            f"strategy:            {c.strategy.value}",
-            f"batch sharded over:  {c.batch_axes or '(replicated)'}",
-            f"seq sharded over:    {c.seq_axes or '(unsharded)'}",
-            f"tensor parallel:     {c.tensor_parallel}",
-            f"params over data:    {c.params_over_data} (FSDP/ZeRO)",
-            f"expert parallel:     {c.expert_parallel}",
-            f"opt-state dtype:     {c.opt_state_dtype}",
-            f"remat:               {c.remat}   microbatches: {c.microbatches}",
-            f"attention variant:   {c.attention_variant}",
+            f"strategy:            {ax['strategy']}",
+            f"batch sharded over:  {ax['batch_axes']}",
+            f"seq sharded over:    {ax['seq_axes']}",
+            f"tensor parallel:     {ax['tensor_parallel']}",
+            f"params over data:    {ax['params_over_data']} (FSDP/ZeRO)",
+            f"expert parallel:     {ax['expert_parallel']}",
+            f"opt-state dtype:     {ax['opt_state_dtype']}",
+            f"seq-shard ckpts:     {ax['seq_shard_checkpoints']}",
+            f"remat:               {ax['remat']}   "
+            f"microbatches: {ax['microbatches']}",
+            f"attention variant:   {ax['attention_variant']}",
         ]
         if self.shape.is_decode:
             # donation per buffer class: the cache pytree (attention slot
             # stacks + recurrent state) is the only donated step input;
             # params and page tables are read-shared across groups
-            donated = "donated (in-place)" if c.donate_cache \
-                else "double-buffered"
             lines += [
-                f"kv-cache batch axes: {c.cache_batch_axes or '(replicated)'}",
-                f"kv-cache heads/model:{c.cache_heads_over_model}  "
-                f"seq axes:{c.cache_seq_axes or '()'}",
-                f"decode kernel:       {c.decode_kernel}",
-                f"buffer donation:     kv-cache/recurrent-state {donated}; "
-                f"params, page tables read-only",
+                f"kv-cache batch axes: {ax['cache_batch_axes']}",
+                f"kv-cache heads/model:{ax['cache_heads_over_model']}  "
+                f"seq axes:{ax['cache_seq_axes']}",
+                f"decode kernel:       {ax['decode_kernel']}",
+                f"buffer donation:     kv-cache/recurrent-state "
+                f"{ax['donate_cache']}; params, page tables read-only",
             ]
         if self.memory is not None:
             lines.append(self.memory.summary())
         if self.cost is not None:
             lines.append(self.cost.summary())
-        for n in c.notes:
+        for n in self.config.notes:
             lines.append(f"note: {n}")
         return "\n".join(lines)

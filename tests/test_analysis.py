@@ -7,10 +7,24 @@ scenarios (submit / stream / cancel / EOS / drain / failover) run with
 
 import pytest
 
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # minimal images: seeded deterministic fallback
+    from repro.testing.hypothesis_compat import given, settings, st
+
+from repro.analysis.cost_audit import (audit_cell, check_explain_axes,
+                                       check_selection_monotonic,
+                                       trace_closure_certificate)
 from repro.analysis.lint import DEFAULT_ROOTS, lint_paths, lint_source
+from repro.analysis.matrix import merge_report, smoke_cells
 from repro.analysis.sanitize import (SanitizeError, check_engine, check_pool,
                                      recount_live_bytes)
+from repro.config import InputShape, MeshConfig
 from repro.configs import get_config
+from repro.core.plan_cache import BucketPolicy, bucket_pow2
+from repro.core.planner import PlanCompiler
+from repro.core.strategies import PLAN_AXES
 from repro.runtime.engine_config import EngineConfig
 from repro.runtime.serve_loop import ServeRequest
 
@@ -531,3 +545,226 @@ def test_serve_launcher_accepts_no_donate_flag():
     assert EngineConfig.from_args(ns).donate is False
     ns = argparse.Namespace(no_donate=False, dtype="float32")
     assert EngineConfig.from_args(ns).donate is True
+
+
+# ---------------------------------------------------------------------------
+# PR 10: shared smoke matrix, cost certifier, selection-decision audits
+# ---------------------------------------------------------------------------
+
+_MESH1 = MeshConfig(shape=(1,), axis_names=("data",))
+
+
+def test_matrix_smoke_cells_enumeration():
+    """One authoritative cell enumeration: decode cells appear under both
+    forced kernels, prefill cells only for handoff-capable archs (kernel
+    pinned to auto), and ``where`` renders the canonical cell id."""
+    cells = list(smoke_cells(archs=("yi-6b-smoke",), dtypes=("bfloat16",),
+                             buckets=((1, 64),)))
+    decode = [c for c in cells if c.kind == "decode"]
+    assert sorted(c.forced_kernel for c in decode) == ["gather", "paged"]
+    assert all(c.where == f"yi-6b-smoke/bfloat16/decode/b1s64/"
+               f"{c.forced_kernel}" for c in decode)
+    prefill = [c for c in cells if c.kind == "prefill"]
+    assert [c.forced_kernel for c in prefill] == ["auto"]
+    assert prefill[0].where == "yi-6b-smoke/bfloat16/prefill/b1s64"
+
+
+def test_matrix_merge_report_preserves_foreign_sections(tmp_path):
+    """The report is shared by three auditors: merging one section must
+    not clobber the others (the historical memory_audit bug), and a
+    non-dict or corrupt prior file is replaced, never crashed on."""
+    import json
+
+    path = str(tmp_path / "R.json")
+    with open(path, "w") as f:
+        json.dump({"memory": {"cells": 3}, "findings": []}, f)
+    merged = merge_report(path, {"cost": {"ok": True}})
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk["memory"] == {"cells": 3}
+    assert on_disk["findings"] == []
+    assert on_disk["cost"] == {"ok": True}
+    assert merged == on_disk
+    # non-dict prior JSON (a bare list) is replaced wholesale
+    with open(path, "w") as f:
+        json.dump([1, 2], f)
+    merge_report(path, {"cost": 1})
+    with open(path) as f:
+        assert json.load(f) == {"cost": 1}
+    # corrupt JSON likewise
+    with open(path, "w") as f:
+        f.write("{not json")
+    merge_report(path, {"memory": 2})
+    with open(path) as f:
+        assert json.load(f) == {"memory": 2}
+
+
+def test_cost_audit_cell_sandwich_and_planted_flops():
+    """A clean cell certifies (floor <= analytic <= ceiling on both the
+    FLOP and traffic statistics); a drifted cost-model constant — FLOPs
+    inflated past the jaxpr-derived ceiling, or deflated under the
+    certified MAC floor — is flagged."""
+    rec, findings = audit_cell("yi-6b-smoke", "bfloat16", "decode", 1, 64,
+                               decode_kernel="gather")
+    assert findings == []
+    fl, tr = rec["flops"], rec["traffic"]
+    assert fl["floor"] <= fl["analytic"] <= fl["ceiling"]
+    assert fl["traced_macs"] > 0
+    assert tr["floor_bytes"] <= tr["analytic_bytes"] <= tr["ceiling_bytes"]
+    _, inflated = audit_cell("yi-6b-smoke", "bfloat16", "decode", 1, 64,
+                             decode_kernel="gather", flop_scale=64.0)
+    assert _rules(inflated) == {"flop-over-estimate"}
+    _, deflated = audit_cell("yi-6b-smoke", "bfloat16", "decode", 1, 64,
+                             decode_kernel="gather", flop_scale=1 / 64.0)
+    assert _rules(deflated) == {"flop-under-estimate"}
+    _, bloated = audit_cell("yi-6b-smoke", "bfloat16", "decode", 1, 64,
+                            decode_kernel="gather", traffic_scale=64.0)
+    assert _rules(bloated) == {"traffic-over-estimate"}
+
+
+def test_cost_audit_monotonicity_checker():
+    """At most one paged/gather flip along a swept statistic; the
+    committed-frac axis additionally admits only paged -> gather."""
+    assert check_selection_monotonic(
+        [(16, "gather"), (32, "paged"), (64, "paged")], "t") == []
+    doctored = [(16, "gather"), (32, "paged"), (64, "gather"),
+                (128, "paged")]
+    found = check_selection_monotonic(doctored, "t")
+    assert _rules(found) == {"crossover-inversion"}
+    # directional: raising committed pages only raises the paged cost
+    wrong_way = [(0.1, "gather"), (0.9, "paged")]
+    assert _rules(check_selection_monotonic(
+        wrong_way, "t", axis="committed_frac")) == {"crossover-inversion"}
+    right_way = [(0.1, "paged"), (0.9, "gather")]
+    assert check_selection_monotonic(
+        right_way, "t", axis="committed_frac") == []
+
+
+def test_cost_audit_explain_completeness():
+    """explain_axes() must record every PLAN_AXES entry; dropping one is
+    exactly the planted violation the checker flags."""
+    plan = PlanCompiler(cache_page_size=64, cache_pool_arenas=4).compile(
+        get_config("yi-6b-smoke"), InputShape("t", 64, 1, "decode"),
+        _MESH1, dtype="bfloat16")
+    axes = plan.explain_axes()
+    assert set(axes) == set(PLAN_AXES)
+    assert check_explain_axes(axes, "t") == []
+    dropped = dict(axes)
+    dropped.pop("decode_kernel")
+    found = check_explain_axes(dropped, "t")
+    assert _rules(found) == {"explain-axis-missing"}
+    assert "decode_kernel" in found[0].detail
+
+
+def test_planner_selection_trace_matches_choice():
+    """The introspection hook reproduces the compiler's actual kernel
+    choice and records the statistics it was made from."""
+    cfg = get_config("yi-6b-smoke")
+    compiler = PlanCompiler(cache_page_size=64, cache_pool_arenas=4)
+    shape = InputShape("t", 256, 4, "decode")
+    trace = compiler.selection_trace(cfg, shape)
+    assert trace["kernel"] in ("paged", "gather", "ref", "none")
+    assert trace["reason"]
+    plan = compiler.compile(cfg, shape, _MESH1, dtype="bfloat16")
+    assert plan.config.decode_kernel == trace["kernel"]
+    # forced compilers report the forced operator with costs untouched
+    forced = PlanCompiler(cache_page_size=64, cache_pool_arenas=4,
+                          decode_kernel="ref").selection_trace(cfg, shape)
+    assert forced["kernel"] == "ref" and forced["forced"]
+
+
+def test_cost_audit_trace_closure_certificate():
+    """The jit-signature set reachable from an EngineConfig is finite:
+    pow2 bucket ladders closed under re-bucketing, signature count within
+    the log-product bound."""
+    rec, findings = trace_closure_certificate()
+    assert findings == []
+    assert rec["finite"]
+    assert rec["signatures"] <= rec["bound"]
+    policy = BucketPolicy()
+    for b in rec["batch_buckets"]:
+        assert bucket_pow2(b, policy.min_batch) == b
+    for s in rec["seq_buckets"]:
+        assert bucket_pow2(s, policy.min_seq) == s
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=1, max_value=4096),
+                          st.integers(min_value=1, max_value=8192)),
+                min_size=1, max_size=64))
+def test_bucket_policy_finite_for_bounded_streams(stream):
+    """Any bounded request stream collapses onto a finite, idempotent
+    bucket set: each bucket is a fixed point of re-bucketing (so
+    recompiles mint no new jit signatures), no bucket overshoots 2x the
+    request dimension (or the policy minimum), and the distinct-bucket
+    count stays within the log2 product bound."""
+    policy = BucketPolicy()
+    buckets = {(bucket_pow2(b, policy.min_batch),
+                bucket_pow2(s, policy.min_seq)) for b, s in stream}
+    for bb, sb in buckets:
+        assert bucket_pow2(bb, policy.min_batch) == bb
+        assert bucket_pow2(sb, policy.min_seq) == sb
+    for b, s in stream:
+        assert bucket_pow2(b, policy.min_batch) <= 2 * max(
+            b, policy.min_batch)
+        assert bucket_pow2(s, policy.min_seq) <= 2 * max(s, policy.min_seq)
+    # 13 batch ladder rungs (1..4096) x 10 seq rungs (16..8192)
+    assert len(buckets) <= 13 * 10
+
+
+def test_lint_plan_axis_in_explain_seeded():
+    """The lint rule flags a PlanConfig field no explain renderer reads,
+    a PlanConfig module with no renderer at all, and stays quiet when
+    every axis is rendered (``notes`` exempt)."""
+    dropped = (
+        "class PlanConfig:\n"
+        "    strategy: str = 'local'\n"
+        "    decode_kernel: str = 'gather'\n"
+        "    notes: tuple = ()\n"
+        "class ExecutionPlan:\n"
+        "    def explain_axes(self):\n"
+        "        return {'strategy': self.config.strategy}\n")
+    found = [f for f in lint_source(dropped)
+             if f.rule == "plan-axis-in-explain"]
+    assert len(found) == 1 and "decode_kernel" in found[0].detail
+    no_renderer = "class PlanConfig:\n    strategy: str = 'local'\n"
+    assert "plan-axis-in-explain" in _rules(lint_source(no_renderer))
+    clean = (
+        "class PlanConfig:\n"
+        "    strategy: str = 'local'\n"
+        "    decode_kernel: str = 'gather'\n"
+        "    notes: tuple = ()\n"
+        "class ExecutionPlan:\n"
+        "    def explain_axes(self):\n"
+        "        c = self.config\n"
+        "        return {'strategy': c.strategy,\n"
+        "                'decode_kernel': c.decode_kernel}\n")
+    assert "plan-axis-in-explain" not in _rules(lint_source(clean))
+
+
+def test_bench_meta_parent_revision_is_current(tmp_path):
+    """An artifact stamped with HEAD's parent (the usual
+    ``<parent>-dirty`` regeneration stamp — that working tree became this
+    commit) reads current; anything older stays stale."""
+    import json
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    try:
+        import bench_meta
+    finally:
+        sys.path.pop(0)
+
+    parent = bench_meta._parent_rev()
+    if not parent or bench_meta.git_describe() == "unknown":
+        pytest.skip("needs a git checkout with a parent commit")
+    fresh = tmp_path / "BENCH_fresh.json"
+    fresh.write_text(json.dumps({"meta": {"git": parent + "-dirty"}}))
+    assert (bench_meta.artifact_revision_status(str(fresh))["status"]
+            == "current")
+    old = tmp_path / "BENCH_old.json"
+    old.write_text(json.dumps({"meta": {"git": "0000bad-dirty"}}))
+    assert (bench_meta.artifact_revision_status(str(old))["status"]
+            == "stale")
